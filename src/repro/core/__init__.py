@@ -1,0 +1,37 @@
+"""DIAL core — the paper's contribution.
+
+Decentralized I/O autotuning from learned client-side local metrics:
+per-client agents probe local PFS statistics, score the configuration
+space with GBDT models, and apply the Conditional-Score-Greedy winner
+to each OSC interface, every interval, with no global coordination.
+"""
+
+from repro.core.agent import DIALAgent, SimClientPort, run_with_agents
+from repro.core.config_space import DEFAULT, SPACE, ConfigSpace
+from repro.core.dataset import CollectConfig, collect, train_models
+from repro.core.gbdt import DenseForest, GBDTClassifier, GBDTParams
+from repro.core.metrics import Snapshot, feature_vector, snapshot
+from repro.core.model import DIALModel
+from repro.core.tuner import TuneDecision, TunerParams, conditional_score_greedy
+
+__all__ = [
+    "DIALAgent",
+    "SimClientPort",
+    "run_with_agents",
+    "DEFAULT",
+    "SPACE",
+    "ConfigSpace",
+    "CollectConfig",
+    "collect",
+    "train_models",
+    "DenseForest",
+    "GBDTClassifier",
+    "GBDTParams",
+    "Snapshot",
+    "feature_vector",
+    "snapshot",
+    "DIALModel",
+    "TuneDecision",
+    "TunerParams",
+    "conditional_score_greedy",
+]

@@ -1,0 +1,176 @@
+"""The per-client DIAL agent (paper SIII-A, components 1-4).
+
+One agent runs on one PFS client, fully autonomously: it probes that
+client's OSC interfaces at a fixed interval, derives the designed metrics,
+scores the configuration space with the learned model, and applies the
+Conditional-Score-Greedy winner to each interface.  Agents never
+communicate — the decentralization thesis — yet collectively respond to
+global congestion through its locally-visible symptoms (RPC latency,
+queue depth, slot starvation).
+
+The agent talks to its client through the tiny :class:`ClientPort`
+protocol so the same code drives (a) the PFS simulator directly and
+(b) the training-framework data pipeline / checkpoint writer
+(:mod:`repro.data.pipeline`), which is how the paper's technique embeds
+into the training system as a first-class feature.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Protocol
+
+import numpy as np
+
+from repro.core.config_space import DEFAULT, SPACE, ConfigSpace
+from repro.core.metrics import Snapshot, snapshot
+from repro.core.model import DIALModel
+from repro.core.tuner import TunerParams, conditional_score_greedy
+from repro.pfs.engine import READ, WRITE
+from repro.pfs.stats import OSCStats, probe
+
+
+class ClientPort(Protocol):
+    """What a DIAL agent needs from the system it tunes."""
+
+    def osc_ids(self) -> list[int]: ...
+    def probe(self, osc: int) -> OSCStats: ...
+    def set_knobs(self, osc: int, window_pages: int, rpcs_in_flight: int) -> None: ...
+
+
+@dataclasses.dataclass
+class SimClientPort:
+    """Adapter: one client of the PFS simulator."""
+
+    sim: object
+    client: int
+
+    def osc_ids(self) -> list[int]:
+        return [int(x) for x in self.sim.client_oscs(self.client)]
+
+    def probe(self, osc: int) -> OSCStats:
+        return probe(self.sim, osc)
+
+    def set_knobs(self, osc: int, window_pages: int, rpcs_in_flight: int) -> None:
+        self.sim.set_knobs([osc], window_pages=window_pages,
+                           rpcs_in_flight=rpcs_in_flight)
+
+
+@dataclasses.dataclass
+class AgentTimings:
+    """Wall-clock overheads per operation (reproduces paper Table III)."""
+
+    snapshot_ms: list = dataclasses.field(default_factory=list)
+    inference_ms: list = dataclasses.field(default_factory=list)
+    end_to_end_ms: list = dataclasses.field(default_factory=list)
+
+    def summary(self) -> dict:
+        f = lambda xs: float(np.mean(xs)) if xs else 0.0
+        return {"snapshot_ms": f(self.snapshot_ms),
+                "inference_ms": f(self.inference_ms),
+                "end_to_end_ms": f(self.end_to_end_ms)}
+
+
+class DIALAgent:
+    """Decentralized tuner for one client; call :meth:`tick` every interval."""
+
+    def __init__(
+        self,
+        port: ClientPort,
+        model: DIALModel,
+        space: ConfigSpace = SPACE,
+        tuner_params: TunerParams = TunerParams(),
+        k: int = 1,
+        min_volume_bytes: float = 256 * 1024,
+        warmup_intervals: int = 2,
+        measure_overhead: bool = False,
+    ):
+        self.port = port
+        self.model = model
+        self.space = space
+        self.tuner_params = tuner_params
+        self.k = k
+        self.min_volume = min_volume_bytes
+        # skip decisions until the workload's startup transient has passed:
+        # H_t must reflect steady metrics under the current theta, matching
+        # the training distribution (alternating-interval exploration)
+        self.warmup = warmup_intervals
+        self._ticks = 0
+        self.measure_overhead = measure_overhead
+        self.timings = {READ: AgentTimings(), WRITE: AgentTimings()}
+        # DIAL keeps only two snapshots per interface in memory (SIV-C)
+        self._prev: dict[int, OSCStats] = {}
+        self._hist: dict[int, collections.deque] = {}
+        self._current: dict[int, tuple[int, int]] = {}
+        self.decisions: list = []
+        for osc in self.port.osc_ids():
+            st = self.port.probe(osc)
+            self._prev[osc] = st
+            self._hist[osc] = collections.deque(maxlen=k + 1)
+            self._current[osc] = (st.window_pages, st.rpcs_in_flight)
+
+    # ------------------------------------------------------------------ #
+    def tick(self) -> list:
+        """One tuning round across all of this client's OSC interfaces."""
+        self._ticks += 1
+        decisions = []
+        for osc in self.port.osc_ids():
+            t0 = time.perf_counter()
+            cur = self.port.probe(osc)
+            snap = snapshot(self._prev[osc], cur)
+            self._prev[osc] = cur
+            self._hist[osc].append(snap)
+            t1 = time.perf_counter()
+            if len(self._hist[osc]) < self.k + 1 or self._ticks <= self.warmup + self.k:
+                continue
+            # pick the op model by observed data-transfer volume (SIII-C)
+            vol_r, vol_w = snap.read_volume, snap.write_volume
+            if max(vol_r, vol_w) < self.min_volume:
+                continue  # idle interface: nothing to tune
+            op = READ if vol_r >= vol_w else WRITE
+            history = list(self._hist[osc])
+            # steady-state guard: bursty applications (epoch duty cycles)
+            # produce intervals straddling on/off boundaries whose metrics
+            # alias unrelated states; only decide when consecutive
+            # snapshots saw comparable volume
+            v0 = (history[0].read_volume if op == READ
+                  else history[0].write_volume)
+            v1 = vol_r if op == READ else vol_w
+            if not (0.5 <= (v1 / max(v0, 1.0)) <= 2.0):
+                continue
+            probs = self.model.score_space(history, op)
+            t2 = time.perf_counter()
+            decision = conditional_score_greedy(
+                probs, op, self._current[osc], self.space, self.tuner_params)
+            if decision.changed:
+                self.port.set_knobs(osc, *decision.theta)
+                self._current[osc] = decision.theta
+            t3 = time.perf_counter()
+            if self.measure_overhead:
+                tm = self.timings[op]
+                tm.snapshot_ms.append((t1 - t0) * 1e3)
+                tm.inference_ms.append((t2 - t1) * 1e3)
+                tm.end_to_end_ms.append((t3 - t0) * 1e3)
+            decisions.append((osc, op, decision))
+        self.decisions.extend(decisions)
+        return decisions
+
+
+def run_with_agents(sim, model: DIALModel, clients: list[int],
+                    seconds: float, interval: float = 0.5,
+                    measure_overhead: bool = False,
+                    tuner_params: TunerParams = TunerParams()) -> list[DIALAgent]:
+    """Drive the simulator with one autonomous agent per client."""
+    agents = [DIALAgent(SimClientPort(sim, c), model,
+                        tuner_params=tuner_params,
+                        measure_overhead=measure_overhead) for c in clients]
+    steps_per_interval = max(int(round(interval / sim.params.tick)), 1)
+    n_intervals = int(round(seconds / interval))
+    for _ in range(n_intervals):
+        for _ in range(steps_per_interval):
+            sim.step()
+        for a in agents:
+            a.tick()
+    return agents

@@ -1,0 +1,94 @@
+"""DIAL's learned models: f(theta, H_t) -> P(improvement > 1+eps).
+
+One :class:`DIALModel` bundles the two GBDT forests (read / write —
+separate models per paper SIII-B) and the batched scorer that evaluates
+the *entire* configuration space against the current history in one shot.
+
+Backends:
+    'numpy'  -- DenseForest.predict_proba (always available; the oracle)
+    'jax'    -- jitted gather-based traversal (repro.kernels.gbdt_forest.ops)
+    'pallas' -- the TPU kernel in interpret mode on CPU, compiled on TPU
+
+The batched evaluation (n_oscs x |Theta| rows per tick) is the paper's
+inference hot spot (Table III: ~10-13.5 ms per interface); the TPU
+formulation evaluates all interfaces x configs in a single launch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.config_space import ConfigSpace, SPACE
+from repro.core.gbdt import DenseForest
+from repro.core.metrics import Snapshot, feature_vector
+from repro.pfs.engine import READ, WRITE
+
+
+@dataclasses.dataclass
+class DIALModel:
+    read_forest: DenseForest
+    write_forest: DenseForest
+    space: ConfigSpace = SPACE
+    backend: str = "numpy"
+    k: int = 1  # history length (paper uses k=1)
+
+    def __post_init__(self):
+        self._theta_feats = self.space.as_features()  # (|Theta|, 2) log2
+        self._jax_fns = {}
+
+    def forest(self, op: int) -> DenseForest:
+        return self.read_forest if op == READ else self.write_forest
+
+    # ------------------------------------------------------------------ #
+    def features_for_space(self, history: list[Snapshot], op: int) -> np.ndarray:
+        """(|Theta|, dim) feature matrix: H_t broadcast against every theta."""
+        from repro.core.metrics import READ_KNOB_IDX, WRITE_KNOB_IDX
+
+        hist = feature_vector(history, op, self._theta_feats[0])[:-4]
+        knobs = READ_KNOB_IDX if op == READ else WRITE_KNOB_IDX
+        last = (history[-1].read if op == READ else history[-1].write)
+        cur = np.array([last[knobs[0]], last[knobs[1]]])
+        m = len(self.space)
+        out = np.empty((m, hist.shape[0] + 4), dtype=np.float32)
+        out[:, :-4] = hist
+        out[:, -4:-2] = self._theta_feats
+        out[:, -2:] = self._theta_feats - cur[None, :]
+        return out
+
+    def score_space(self, history: list[Snapshot], op: int) -> np.ndarray:
+        """f(theta, H_t) for every theta in space order."""
+        X = self.features_for_space(history, op)
+        return self.predict_proba(op, X)
+
+    def score_space_batch(self, histories: list[list[Snapshot]],
+                          op: int) -> np.ndarray:
+        """(n_oscs, |Theta|) probabilities — one launch for all interfaces."""
+        X = np.concatenate([self.features_for_space(h, op) for h in histories])
+        p = self.predict_proba(op, X)
+        return p.reshape(len(histories), len(self.space))
+
+    # ------------------------------------------------------------------ #
+    def predict_proba(self, op: int, X: np.ndarray) -> np.ndarray:
+        f = self.forest(op)
+        if self.backend == "numpy":
+            return f.predict_proba(X)
+        from repro.kernels.gbdt_forest import ops as kops  # lazy import
+        key = (op, self.backend)
+        if key not in self._jax_fns:
+            self._jax_fns[key] = kops.make_predictor(
+                f, use_pallas=(self.backend == "pallas"))
+        return np.asarray(self._jax_fns[key](np.asarray(X, dtype=np.float32)))
+
+    # ------------------------------------------------------------------ #
+    def save(self, prefix: str) -> None:
+        self.read_forest.save(prefix + ".read.npz")
+        self.write_forest.save(prefix + ".write.npz")
+
+    @staticmethod
+    def load(prefix: str, backend: str = "numpy") -> "DIALModel":
+        return DIALModel(
+            read_forest=DenseForest.load(prefix + ".read.npz"),
+            write_forest=DenseForest.load(prefix + ".write.npz"),
+            backend=backend)

@@ -1,0 +1,75 @@
+"""Parameter tuning strategy — *Conditional Score Greedy* (paper Alg. 1).
+
+Given the probability distribution the model assigns over Theta, the tuner
+
+  1. keeps only configurations whose predicted probability of >=15%
+     improvement exceeds tau (0.8 in the paper);
+  2. MinMax-normalizes the surviving configurations;
+  3. breaks ties *away from* greedy-safe choices with a regularizer that
+     prefers larger theta values (larger RPCs utilize channels better,
+     more RPCs in flight move more data in parallel — SIII-C), weighted
+     by alpha (read) / beta (write):
+
+         WriteScore(theta) = f(theta, H_t) * (1 + beta * sum(theta_norm))
+         ReadScore(theta)  = f(theta, H_t) * (1 + alpha * theta1_norm)
+                             + theta2_norm
+
+If no configuration clears tau, the current configuration is kept — the
+model sees no sufficiently-likely win, so DIAL does not thrash.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.config_space import ConfigSpace, SPACE
+from repro.pfs.engine import READ, WRITE
+
+
+@dataclasses.dataclass(frozen=True)
+class TunerParams:
+    tau: float = 0.8      # probability threshold (paper SIII-C)
+    alpha: float = 0.3    # read regularizer weight on theta^1 (window)
+    beta: float = 0.25    # write regularizer weight on sum(theta)
+
+
+@dataclasses.dataclass
+class TuneDecision:
+    theta: tuple[int, int]
+    changed: bool
+    n_candidates: int
+    probs: np.ndarray     # f(theta, H_t) over the whole space
+    score: float
+
+
+def conditional_score_greedy(
+    probs: np.ndarray,
+    op: int,
+    current: tuple[int, int],
+    space: ConfigSpace = SPACE,
+    params: TunerParams = TunerParams(),
+) -> TuneDecision:
+    """Algorithm 1.  ``probs`` is f(theta, H_t) for every theta in
+    ``space.configs()`` order."""
+    thetas = space.as_array()                      # (|Theta|, 2) raw values
+    keep = probs > params.tau                      # line 4
+    if not keep.any():                             # no candidate clears tau
+        return TuneDecision(theta=current, changed=False, n_candidates=0,
+                            probs=probs, score=0.0)
+
+    S = thetas[keep]
+    pS = probs[keep]
+    norm = space.minmax_normalize(S)               # line 6
+
+    if op == WRITE:                                # lines 7-8, 11-12
+        scores = pS * (1.0 + params.beta * norm.sum(axis=1))
+    else:                                          # lines 9-10, 13-14
+        scores = pS * (1.0 + params.alpha * norm[:, 0]) + norm[:, 1]
+
+    j = int(np.argmax(scores))
+    theta = (int(S[j, 0]), int(S[j, 1]))
+    return TuneDecision(theta=theta, changed=theta != tuple(current),
+                        n_candidates=int(keep.sum()), probs=probs,
+                        score=float(scores[j]))

@@ -1,0 +1,5 @@
+"""Training-data pipeline that ingests through the simulated PFS."""
+
+from repro.data.pipeline import DataPipeline, PipelineConfig
+
+__all__ = ["DataPipeline", "PipelineConfig"]

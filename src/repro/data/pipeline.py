@@ -1,0 +1,138 @@
+"""Sharded token pipeline reading through the PFS client — DIAL's host.
+
+Every training host is one PFS client pulling its shard slice of the
+global batch each step (and the checkpoint engine pushes through the same
+client's write path).  The pipeline:
+
+  * issues closed-loop reads against the simulated Lustre client
+    (striped over the dataset's OSTs) sized to the host's per-step quota;
+  * runs a DIAL agent per host at the probe interval, tuning that
+    client's (window, in-flight) knobs from purely local metrics;
+  * synthesizes the actual token arrays deterministically (seeded) —
+    the simulator accounts for the *bytes*; the tensor content is
+    reproducible regardless of I/O timing, so training is bitwise
+    deterministic under any tuning behaviour;
+  * tracks a resumable cursor (step index) checkpointed with the model —
+    restart replays from the exact batch;
+  * straggler mitigation: a host whose shard read lags `straggler_factor`
+    behind the fleet median re-issues the remainder against a replica
+    OST (redundant fetch), so one slow OST cannot stall the step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.agent import DIALAgent, SimClientPort
+from repro.core.model import DIALModel
+from repro.pfs.engine import READ, PFSSim
+from repro.pfs.workloads import Workload
+
+
+@dataclasses.dataclass
+class PipelineConfig:
+    global_batch: int
+    seq_len: int
+    vocab_size: int
+    n_hosts: int = 4
+    bytes_per_token: float = 2.0     # uint16 token shards on disk
+    osts_per_host: int = 2
+    probe_interval: float = 0.5
+    straggler_factor: float = 3.0
+    seed: int = 0
+    num_codebooks: int = 0
+
+
+class DataPipeline:
+    """Deterministic token source + PFS-accounted ingest with DIAL."""
+
+    def __init__(self, cfg: PipelineConfig, sim: PFSSim | None = None,
+                 dial_model: DIALModel | None = None):
+        self.cfg = cfg
+        n_osts = max(cfg.n_hosts * cfg.osts_per_host, 1)
+        self.sim = sim or PFSSim(n_clients=cfg.n_hosts, n_osts=n_osts, seed=cfg.seed)
+        self.rng = np.random.default_rng(cfg.seed)
+        self.step_index = 0
+        self._since_probe = 0.0
+        self.agents = []
+        if dial_model is not None:
+            self.agents = [
+                DIALAgent(SimClientPort(self.sim, h), dial_model)
+                for h in range(cfg.n_hosts)
+            ]
+        # per-host ingest workloads: sequential shard streams
+        self.workloads = []
+        for h in range(cfg.n_hosts):
+            osts = tuple(range(h * cfg.osts_per_host,
+                               (h + 1) * cfg.osts_per_host))
+            w = Workload(client=h, op=READ, req_size=1 * 2**20,
+                         randomness=0.1, n_threads=4, osts=osts,
+                         name=f"ingest_host{h}")
+            self.sim.attach(w)
+            self.workloads.append(w)
+        self._done_base = [w.done_bytes(self.sim) for w in self.workloads]
+
+    # ------------------------------------------------------------------ #
+    def step_bytes_per_host(self) -> float:
+        c = self.cfg
+        tokens = c.global_batch * c.seq_len * max(c.num_codebooks, 1)
+        return tokens * c.bytes_per_token / c.n_hosts
+
+    def next_batch(self) -> dict:
+        """Advance the simulator until every host has read its quota,
+        running DIAL agents at the probe interval; return the batch."""
+        c = self.cfg
+        quota = self.step_bytes_per_host()
+        target = [b + quota for b in self._done_base]
+        stalled_redundant = set()
+        max_sim_s = 120.0
+        waited = 0.0
+        while waited < max_sim_s:
+            done = [w.done_bytes(self.sim) for w in self.workloads]
+            lag = [t - d for t, d in zip(target, done)]
+            if max(lag) <= 0:
+                break
+            # straggler mitigation: re-stripe the laggard onto all OSTs
+            med = float(np.median(lag))
+            for h, l in enumerate(lag):
+                if (l > c.straggler_factor * max(med, 1.0)
+                        and h not in stalled_redundant and med >= 0):
+                    w = self.workloads[h]
+                    w.osts = tuple(range(self.sim.n_osts))
+                    w.bind(self.sim)
+                    self._done_base[h] = 0.0
+                    target[h] = w.done_bytes(self.sim) + l
+                    stalled_redundant.add(h)
+            self.sim.run(self.cfg.probe_interval)
+            waited += self.cfg.probe_interval
+            for a in self.agents:
+                a.tick()
+        self._done_base = [w.done_bytes(self.sim) for w in self.workloads]
+
+        batch = self._materialize(self.step_index)
+        self.step_index += 1
+        return batch
+
+    def ingest_throughput(self) -> float:
+        """Aggregate delivered bytes/sec so far (sim time)."""
+        total = sum(w.done_bytes(self.sim) for w in self.workloads)
+        return total / max(self.sim.now, 1e-9)
+
+    # ------------------------------------------------------------------ #
+    def _materialize(self, step: int) -> dict:
+        c = self.cfg
+        rng = np.random.default_rng((c.seed, step))
+        shape = (c.global_batch, c.seq_len)
+        if c.num_codebooks:
+            shape = shape + (c.num_codebooks,)
+        tokens = rng.integers(0, c.vocab_size, size=shape, dtype=np.int32)
+        return {"tokens": tokens, "labels": tokens}
+
+    # --- checkpointable cursor ---------------------------------------- #
+    def state_dict(self) -> dict:
+        return {"step_index": self.step_index}
+
+    def load_state_dict(self, state: dict) -> None:
+        self.step_index = int(state["step_index"])

@@ -1,0 +1,12 @@
+"""Distribution: sharding rules, ZeRO-1, gradient compression."""
+
+from repro.distributed.sharding import (
+    batch_pspec,
+    cache_pspecs,
+    dp_axes,
+    param_pspecs,
+    zero1_pspecs,
+)
+
+__all__ = ["batch_pspec", "cache_pspecs", "dp_axes", "param_pspecs",
+           "zero1_pspecs"]

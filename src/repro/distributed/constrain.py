@@ -1,0 +1,50 @@
+"""Sharding-constraint hooks usable from inside model code.
+
+``constrain(x, *axes)`` applies ``with_sharding_constraint`` when called
+under an active mesh (pjit tracing in the launcher / dry-run) and is a
+no-op otherwise (CPU smoke tests, single device).  The special axis name
+"dp" expands to the data-parallel axes of the active mesh (('pod',
+'data') on the multi-pod mesh), and axes absent from the mesh are
+dropped — the same annotation works on any mesh shape.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _active_mesh():
+    try:
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        if m.empty:
+            return None
+        return m
+    except Exception:  # pragma: no cover
+        return None
+
+
+def model_axis_size() -> int:
+    """Size of the 'model' axis in the active mesh (0 when no mesh)."""
+    mesh = _active_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return 0
+    return int(mesh.shape["model"])
+
+
+def constrain(x, *axes):
+    mesh = _active_mesh()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+    spec = []
+    for a in axes:
+        if a == "dp":
+            dp = tuple(n for n in ("pod", "data") if n in names)
+            spec.append(dp if dp else None)
+        elif a is None or a in names:
+            spec.append(a)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))

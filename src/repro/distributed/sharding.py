@@ -1,0 +1,179 @@
+"""Sharding rules: parameters, optimizer state (ZeRO-1), batches, caches.
+
+Mesh axes: ``('data', 'model')`` single-pod, ``('pod', 'data', 'model')``
+multi-pod.  Batch and gradient reduction use (pod, data); tensor
+parallelism (heads / ffn / experts / vocab) uses 'model'.
+
+Rules are keyed by parameter *name* (the innermost dict key), matching the
+layouts in repro.models.*; stacked (scanned) layers get a leading
+replicated dim.  ZeRO-1 additionally shards optimizer moments over the
+data axes along the largest replicated-and-divisible dimension.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh):
+    """Data-parallel mesh axes (includes 'pod' when present)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_pspec(mesh: Mesh) -> P:
+    return P(dp_axes(mesh))
+
+
+# --- per-name rules: trailing-dims spec (stacked leading dim added later)
+# 'M' marks the model-sharded dim.
+_RULES = {
+    # attention
+    "wq": (None, "model"), "wk": (None, "model"), "wv": (None, "model"),
+    "bq": ("model",), "bk": ("model",), "bv": ("model",),
+    "wo": ("model", None),
+    # mlp
+    "gate": (None, "model"), "up": (None, "model"), "down": ("model", None),
+    # moe (leading expert axis -> expert parallel over 'model')
+    "router": (None, None),
+    "moe_gate": ("model", None, None), "moe_up": ("model", None, None),
+    "moe_down": ("model", None, None),
+    "shared_gate": (None,),
+    # mamba
+    "in_proj": (None, "model"), "conv_w": ("model", None),
+    "x_proj": ("model", None), "dt_proj": (None, "model"),
+    "dt_bias": ("model",), "A_log": ("model", None), "D": ("model",),
+    "out_proj": ("model", None),
+    # rglru
+    "in_gate": (None, "model"), "in_lin": (None, "model"),
+    "wa": (None, "model"), "wx": (None, "model"),
+    "ba": ("model",), "bx": ("model",), "lam": ("model",),
+    # norms
+    "scale": (None,), "bias": (None,),
+}
+
+
+def _spec_for(path, leaf) -> tuple:
+    names = [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
+    name = names[-1]
+    parents = names[:-1]
+    ndim = leaf.ndim
+
+    if name == "embed":
+        spec = ("model", None, None)[-ndim:] if ndim == 3 \
+            else ("model", None)          # vocab-sharded
+    elif name == "head":
+        spec = (None, None, "model")[-ndim:] if ndim == 3 \
+            else (None, "model")
+    elif "moe" in parents and name in ("gate", "up", "down"):
+        spec = _RULES["moe_" + name]
+    elif "shared" in parents:             # qwen2moe shared expert = dense mlp
+        spec = _RULES[name]
+    else:
+        spec = _RULES.get(name)
+        if spec is None:
+            spec = (None,) * ndim
+    # stacked (scanned) leaves carry a leading n_rep dim
+    extra = ndim - len(spec)
+    assert extra >= 0, (names, leaf.shape, spec)
+    return (None,) * extra + tuple(spec)
+
+
+def param_pspecs(params) -> dict:
+    """PartitionSpec pytree matching a params (or abstract params) tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: P(*_spec_for(path, leaf)), params)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def validate_pspecs(pspecs, tree, mesh: Mesh):
+    """Drop mesh axes from dims they don't divide.
+
+    E.g. qwen2-moe's 60 experts cannot shard 16 ways — the expert axis
+    falls back to replication (pure-DP MoE baseline; see EXPERIMENTS.md
+    SPerf for the padded-EP variant).
+    """
+    def axis_size(a):
+        if a is None:
+            return 1
+        if isinstance(a, (tuple, list)):
+            n = 1
+            for x in a:
+                n *= mesh.shape[x]
+            return n
+        return mesh.shape[a]
+
+    def one(spec, leaf):
+        fixed = []
+        for dim, a in zip(leaf.shape, tuple(spec) + (None,) * (leaf.ndim - len(spec))):
+            fixed.append(a if a is not None and dim % axis_size(a) == 0 else None)
+        return P(*fixed)
+
+    return jax.tree.map(one, pspecs, tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def zero1_pspecs(params, pspecs, mesh: Mesh) -> dict:
+    """Optimizer-moment specs: param spec + data-axis sharding (ZeRO-1).
+
+    For each leaf, shard the largest dim that is currently replicated and
+    divisible by the data-parallel world size.  Falls back to the param
+    spec when nothing divides (small norms/biases stay replicated).
+    """
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+
+    def one(path, leaf):
+        spec = list(_spec_for(path, leaf))
+        if dp_size > 1:
+            order = sorted(range(leaf.ndim), key=lambda i: -leaf.shape[i])
+            for i in order:
+                if spec[i] is None and leaf.shape[i] % dp_size == 0:
+                    spec[i] = dp if len(dp) > 1 else dp[0]
+                    break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def cache_pspecs(cfg, cache, mesh: Mesh, shard_seq: bool = False) -> dict:
+    """Decode-cache specs.
+
+    Default: batch over data axes, kv-heads (or channels) over 'model'.
+    ``shard_seq=True`` (long-context, batch=1): the KV sequence axis
+    shards over the data axes instead — sequence parallelism for decode.
+    """
+    dp = dp_axes(mesh)
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    model_size = mesh.shape["model"]
+    # kv heads shard over 'model' when divisible, else head_dim does
+    # (all assigned archs have head_dim % 16 == 0)
+    kv_heads_ok = cfg.n_kv_heads % model_size == 0
+
+    def one(path, leaf):
+        names = [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
+        name = names[-1]
+        if name in ("k", "v"):              # (B, S, Hkv, Dh)
+            kv_model = ("model", None) if kv_heads_ok else (None, "model")
+            spec = (None, dp_spec) + kv_model if shard_seq \
+                else (dp_spec, None) + kv_model
+        elif name == "conv":                # (B, K-1, W)
+            spec = (None, None, "model") if shard_seq \
+                else (dp_spec, None, "model")
+        elif name == "ssm":                 # (B, Di, N)
+            spec = (None, "model", None) if shard_seq \
+                else (dp_spec, "model", None)
+        elif name == "h":                   # (B, W)
+            spec = (None, "model") if shard_seq else (dp_spec, "model")
+        else:
+            spec = ()
+        # leaves under cache['stack'] carry a leading n_rep dim
+        extra = leaf.ndim - len(spec)
+        return P(*((None,) * extra + tuple(spec)))
+
+    return jax.tree_util.tree_map_with_path(one, cache)

@@ -1,0 +1,33 @@
+"""Jitted public wrapper for flash attention with backend dispatch."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention import kernel as _kernel
+from repro.kernels.flash_attention import ref as _ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "backend", "block_q",
+                     "block_kv"))
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              softcap: float = 0.0, backend: str = "ref",
+              block_q: int = 128, block_kv: int = 128):
+    """Attention entry point.
+
+    backend:
+        'ref'              -- materialized jnp oracle (small shapes/tests)
+        'pallas_interpret' -- TPU kernel executed in interpret mode (CPU)
+        'pallas'           -- TPU kernel compiled for TPU
+    """
+    if backend == "ref":
+        return _ref.mha_ref(q, k, v, causal=causal, window=window,
+                            softcap=softcap).astype(q.dtype)
+    return _kernel.flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_kv=block_kv,
+        interpret=(backend == "pallas_interpret"))

@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for flash attention (GQA + causal + window + softcap).
+
+The O(S^2) materialized form is the ground truth for the Pallas kernel
+and for the chunked online-softmax production path in
+:mod:`repro.models.attention` (used when lowering on non-TPU backends).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _softmax(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def mha_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+            softcap: float = 0.0, scale: float | None = None):
+    """Materialized attention.
+
+    Args:
+        q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) with Hq % Hkv == 0.
+        causal: apply causal mask aligned to the sequence end
+            (query i attends to keys j <= i + (Skv - Sq)).
+        window: additionally mask keys more than `window` positions behind
+            the query (sliding-window / local attention).
+        softcap: if > 0, logits = softcap * tanh(logits / softcap)
+            (Gemma-2 logit soft-capping).
+        scale: defaults to D ** -0.5.
+
+    Returns:
+        (B, Hq, Sq, D) float32.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    scale = d ** -0.5 if scale is None else scale
+
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kr.astype(jnp.float32)) * scale
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qi = jnp.arange(sq)[:, None] + (skv - sq)
+    kj = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    return jnp.einsum("bhqk,bhkd->bhqd", _softmax(logits), vr.astype(jnp.float32))

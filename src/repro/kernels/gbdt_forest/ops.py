@@ -1,0 +1,40 @@
+"""Jitted public wrappers for GBDT forest inference."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gbdt_forest import kernel as _kernel
+from repro.kernels.gbdt_forest import ref as _ref
+
+
+def make_predictor(forest, use_pallas: bool = False, interpret: bool = True):
+    """Build a jitted ``X -> probabilities`` closure for a DenseForest.
+
+    The forest arrays are closed over (donated to the device once);
+    only the sample matrix streams per call.
+    """
+    feature = jnp.asarray(forest.feature, dtype=jnp.int32)
+    threshold = jnp.asarray(forest.threshold, dtype=jnp.float32)
+    leaf = jnp.asarray(forest.leaf, dtype=jnp.float32)
+    base = float(forest.base_score)
+    depth = int(forest.depth)
+
+    if use_pallas:
+        def margin_fn(x):
+            return _kernel.forest_margin(x, feature, threshold, leaf, base,
+                                         depth, interpret=interpret)
+    else:
+        def margin_fn(x):
+            return _ref.forest_margin_ref(x, feature, threshold, leaf, base,
+                                          depth)
+
+    @jax.jit
+    def predict(x):
+        m = margin_fn(x.astype(jnp.float32))
+        return 1.0 / (1.0 + jnp.exp(-jnp.clip(m, -30.0, 30.0)))
+
+    return predict

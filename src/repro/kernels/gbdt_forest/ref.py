@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for dense-forest GBDT inference.
+
+Matches :meth:`repro.core.gbdt.DenseForest.predict_margin` bit-for-bit on
+float32 inputs: a static ``depth``-step level-synchronous descent through
+complete binary trees laid out in dense arrays.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def forest_margin_ref(x, feature, threshold, leaf, base_score: float,
+                      depth: int):
+    """Reference forest margins.
+
+    Args:
+        x:         (N, F) float32 samples.
+        feature:   (T, 2^D - 1) int32 split features.
+        threshold: (T, 2^D - 1) float32 split thresholds (+inf = pass left).
+        leaf:      (T, 2^D) float32 leaf values.
+        base_score: scalar initial margin.
+        depth:     D, static.
+
+    Returns:
+        (N,) float32 margins (pre-sigmoid).
+    """
+    n = x.shape[0]
+    t = feature.shape[0]
+    n_internal = feature.shape[1]
+    # flatten forests for (sample, tree) gathers
+    feat_flat = feature.reshape(-1)
+    thr_flat = threshold.reshape(-1)
+    leaf_flat = leaf.reshape(-1)
+    tree_off = jnp.arange(t, dtype=jnp.int32) * n_internal
+
+    idx = jnp.zeros((n, t), dtype=jnp.int32)
+    for _ in range(depth):
+        node = idx + tree_off[None, :]
+        f = feat_flat[node]                      # (N, T)
+        thr = thr_flat[node]                     # (N, T)
+        xv = jnp.take_along_axis(x, f, axis=1)   # (N, T)
+        go_right = (xv > thr).astype(jnp.int32)
+        idx = 2 * idx + 1 + go_right
+    leaf_idx = idx - n_internal
+    vals = leaf_flat[leaf_idx + jnp.arange(t, dtype=jnp.int32)[None, :] * leaf.shape[1]]
+    return vals.sum(axis=1).astype(jnp.float32) + jnp.float32(base_score)
+
+
+def forest_proba_ref(x, feature, threshold, leaf, base_score: float, depth: int):
+    m = forest_margin_ref(x, feature, threshold, leaf, base_score, depth)
+    return 1.0 / (1.0 + jnp.exp(-jnp.clip(m, -30.0, 30.0)))

@@ -1,0 +1,20 @@
+"""Jitted public wrapper for the Mamba selective scan."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.mamba_scan import kernel as _kernel
+from repro.kernels.mamba_scan import ref as _ref
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "block_d"))
+def selective_scan(u, delta, A, B, C, D, *, backend: str = "ref",
+                   block_d: int = _kernel.DEFAULT_BLOCK_D):
+    if backend == "ref":
+        return _ref.selective_scan_ref(u, delta, A, B, C, D)
+    return _kernel.selective_scan(
+        u, delta, A, B, C, D, block_d=block_d,
+        interpret=(backend == "pallas_interpret"))

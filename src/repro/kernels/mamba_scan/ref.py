@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the Mamba-1 selective scan.
+
+Recurrence (per batch, channel d, state n):
+    h_t = exp(delta_t * A) * h_{t-1} + (delta_t * u_t) * B_t
+    y_t = (h_t . C_t) + D * u_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(u, delta, A, B, C, D):
+    """Sequential-scan reference.
+
+    Args:
+        u:     (Bt, S, Dm) gated input.
+        delta: (Bt, S, Dm) positive timestep (post-softplus).
+        A:     (Dm, N) negative-real state matrix.
+        B:     (Bt, S, N) input projection.
+        C:     (Bt, S, N) output projection.
+        D:     (Dm,) skip gain.
+
+    Returns:
+        y: (Bt, S, Dm) float32.
+    """
+    u = u.astype(jnp.float32)
+    delta = delta.astype(jnp.float32)
+    A = A.astype(jnp.float32)
+    B = B.astype(jnp.float32)
+    C = C.astype(jnp.float32)
+    D = D.astype(jnp.float32)
+    bt, s, dm = u.shape
+    n = A.shape[1]
+
+    def step(h, xs):
+        u_t, d_t, b_t, c_t = xs
+        a = jnp.exp(d_t[:, :, None] * A[None])            # (Bt, Dm, N)
+        h = a * h + (d_t * u_t)[:, :, None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t) + D[None] * u_t
+        return h, y
+
+    h0 = jnp.zeros((bt, dm, n), jnp.float32)
+    xs = (jnp.moveaxis(u, 1, 0), jnp.moveaxis(delta, 1, 0),
+          jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1)

@@ -1,0 +1,19 @@
+"""Jitted public wrapper for the RG-LRU scan."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rglru_scan import kernel as _kernel
+from repro.kernels.rglru_scan import ref as _ref
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "block_d"))
+def rglru(x, a, *, backend: str = "ref",
+          block_d: int = _kernel.DEFAULT_BLOCK_D):
+    if backend == "ref":
+        return _ref.rglru_ref(x, a)
+    return _kernel.rglru(x, a, block_d=block_d,
+                         interpret=(backend == "pallas_interpret"))

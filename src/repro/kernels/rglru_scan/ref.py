@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the RG-LRU gated linear recurrence (Griffin).
+
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * x_t
+
+with a_t in (0, 1) the per-channel recurrent gate.  The sqrt(1-a^2)
+input normalization is Griffin's (arXiv:2402.19427 eq. 4).
+
+The reference uses an associative scan (the composition
+(a1,b1)*(a2,b2) = (a1*a2, a2*b1 + b2) is associative), which is also the
+production jnp path for training on long sequences.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(x, a):
+    """Associative-scan reference.
+
+    Args:
+        x: (B, S, D) input.
+        a: (B, S, D) recurrent gate in (0, 1).
+
+    Returns:
+        h: (B, S, D) float32.
+    """
+    x = x.astype(jnp.float32)
+    a = a.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 0.0)) * x
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h

@@ -1,0 +1,254 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set the host-device override before ANY jax import (jax locks the
+device count on first init).
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCHS, get_config  # noqa: E402
+from repro.configs.shapes import SHAPES, applicable_shapes  # noqa: E402
+from repro.distributed import sharding as shd  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import lm  # noqa: E402
+from repro.train.optimizer import AdamWConfig, init_opt_state  # noqa: E402
+from repro.train.steps import (  # noqa: E402
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+from repro.utils import hlo as hlo_util  # noqa: E402
+from repro.utils import flops as flops_util  # noqa: E402
+
+
+def _abstract(tree, shardings):
+    """ShapeDtypeStructs with shardings attached (no allocation)."""
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        tree, shardings)
+
+
+def input_specs(cfg, shape, mesh):
+    """Abstract model inputs for one shape — the dry-run's stand-ins."""
+    b, s = shape.global_batch, shape.seq_len
+    dp_size = 1
+    for a in shd.dp_axes(mesh):
+        dp_size *= mesh.shape[a]
+    # batch=1 long-context decode cannot shard the batch axis
+    dp = shd.batch_pspec(mesh) if b % dp_size == 0 else P(None)
+    out = {}
+    if shape.kind in ("train", "prefill"):
+        s_text = s - (cfg.img_tokens if cfg.family == "vlm" else 0)
+        tshape = (b, s_text, cfg.num_codebooks) if cfg.num_codebooks \
+            else (b, s_text)
+        tsh = NamedSharding(mesh, P(*dp, *([None] * (len(tshape) - 1))))
+        out["tokens"] = jax.ShapeDtypeStruct(tshape, jnp.int32, sharding=tsh)
+        if shape.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct(tshape, jnp.int32, sharding=tsh)
+        if cfg.family == "vlm":
+            ish = NamedSharding(mesh, P(*dp, None, None))
+            out["img_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.img_tokens, cfg.d_model), jnp.bfloat16, sharding=ish)
+    else:  # decode
+        tshape = (b, 1, cfg.num_codebooks) if cfg.num_codebooks else (b, 1)
+        tsh = NamedSharding(mesh, P(*dp, *([None] * (len(tshape) - 1))))
+        out["tokens"] = jax.ShapeDtypeStruct(tshape, jnp.int32, sharding=tsh)
+    return out
+
+
+def baseline_grad_accum(shape, mesh) -> int:
+    dp = 1
+    for a in shd.dp_axes(mesh):
+        dp *= mesh.shape[a]
+    per_dev = shape.global_batch // dp
+    return max(per_dev // 2, 1)  # microbatch of 2 sequences per device
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               grad_accum: int | None = None, donate: bool = True):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+
+    aparams = lm.abstract_params(cfg)
+    pspecs = shd.param_pspecs(aparams)
+    pspecs = shd.validate_pspecs(pspecs, aparams, mesh)
+    p_sh = shd.named(mesh, pspecs)
+    aparams = _abstract(aparams, p_sh)
+    inputs = input_specs(cfg, shape, mesh)
+
+    if shape.kind == "train":
+        accum = grad_accum or baseline_grad_accum(shape, mesh)
+        aopt = jax.eval_shape(init_opt_state, aparams)
+        ospecs = {"step": P(),
+                  "m": shd.zero1_pspecs(aparams, pspecs, mesh),
+                  "v": shd.zero1_pspecs(aparams, pspecs, mesh)}
+        ospecs = {"step": P(),
+                  "m": shd.validate_pspecs(ospecs["m"], aopt["m"], mesh),
+                  "v": shd.validate_pspecs(ospecs["v"], aopt["v"], mesh)}
+        o_sh = shd.named(mesh, ospecs)
+        aopt = _abstract(aopt, o_sh)
+        step = make_train_step(cfg, AdamWConfig(), grad_accum=accum)
+        jitted = jax.jit(step, donate_argnums=(0, 1) if donate else ())
+        with mesh:
+            lowered = jitted.lower(aparams, aopt, inputs)
+        extra = {"grad_accum": accum}
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg, max_len=shape.seq_len)
+        jitted = jax.jit(step)
+        with mesh:
+            if cfg.family == "vlm":
+                lowered = jitted.lower(aparams, inputs["tokens"],
+                                       inputs["img_embeds"])
+            else:
+                lowered = jitted.lower(aparams, inputs["tokens"])
+        extra = {}
+    else:  # decode
+        shard_seq = shape.global_batch == 1
+        acache = jax.eval_shape(
+            lambda: lm.init_cache(cfg, shape.global_batch, shape.seq_len))
+        cspecs = shd.cache_pspecs(cfg, acache, mesh, shard_seq=shard_seq)
+        c_sh = shd.named(mesh, cspecs)
+        acache = _abstract(acache, c_sh)
+        step = make_decode_step(cfg)
+        jitted = jax.jit(step, donate_argnums=(2,) if donate else ())
+        cur = jax.ShapeDtypeStruct((), jnp.int32,
+                                   sharding=NamedSharding(mesh, P()))
+        with mesh:
+            lowered = jitted.lower(aparams, inputs["tokens"], acache, cur)
+        extra = {"shard_seq": shard_seq}
+    return cfg, shape, mesh, lowered, extra
+
+
+def analyze(cfg, shape, mesh, lowered, extra) -> dict:
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    rec = {"arch": cfg.arch_id, "shape": shape.name,
+           "mesh": list(mesh.devices.shape), "chips": mesh.size,
+           "kind": shape.kind, "compile_s": round(compile_s, 1), **extra}
+
+    # raw XLA numbers kept for reference; NOTE they count while (scan)
+    # bodies once (verified in tests/test_roofline.py) so the roofline
+    # terms below use the analytic model + loop-aware collective parsing.
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        rec["xla_flops_raw"] = float(ca.get("flops", 0.0))
+        rec["xla_bytes_raw"] = float(ca.get("bytes accessed", 0.0))
+    except Exception as e:  # pragma: no cover
+        rec["cost_analysis_error"] = str(e)
+
+    model_shards = mesh.shape["model"]
+    cost = flops_util.cell_cost(
+        cfg, shape, chips=mesh.size, model_shards=model_shards,
+        grad_accum=extra.get("grad_accum", 1), remat=True,
+        window_cache=extra.get("window_cache", False))
+    rec["flops_per_chip"] = cost.flops_per_chip
+    rec["hbm_bytes_per_chip"] = cost.hbm_bytes_per_chip
+
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                rec[attr] = int(v)
+    except Exception as e:  # pragma: no cover
+        rec["memory_analysis_error"] = str(e)
+
+    text = compiled.as_text()
+    stats = hlo_util.collective_stats(text)
+    rec["collective_counts"] = stats.counts
+    rec["collective_bytes_by_kind"] = {k: int(v)
+                                       for k, v in stats.bytes_by_kind.items()}
+    rec["wire_bytes_raw"] = float(stats.total_wire_bytes)
+    # TPU-width adjustment for XLA:CPU's bf16->f32 upcast artifact
+    rec["wire_bytes_per_chip"] = float(stats.tpu_adjusted_wire_bytes)
+
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * n_active * tokens
+    else:
+        model_flops = 2.0 * n_active * shape.global_batch
+    roof = hlo_util.Roofline(
+        flops=rec["flops_per_chip"], hbm_bytes=rec["hbm_bytes_per_chip"],
+        wire_bytes=rec["wire_bytes_per_chip"], model_flops=model_flops,
+        chips=mesh.size)
+    rec["roofline"] = roof.to_dict()
+    return rec
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             grad_accum: int | None = None) -> dict:
+    cfg, shape, mesh, lowered, extra = lower_cell(
+        arch, shape_name, multi_pod, grad_accum=grad_accum)
+    rec = analyze(cfg, shape, mesh, lowered, extra)
+    os.makedirs(out_dir, exist_ok=True)
+    tag = "multipod" if multi_pod else "pod"
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[dryrun] {arch} x {shape_name} x {tag}: "
+          f"dominant={rec['roofline']['dominant']} "
+          f"compute={rec['roofline']['compute_s']:.4f}s "
+          f"memory={rec['roofline']['memory_s']:.4f}s "
+          f"collective={rec['roofline']['collective_s']:.4f}s "
+          f"(compile {rec['compile_s']}s)")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, choices=list(ARCHS))
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--grad-accum", type=int, default=None)
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args(argv)
+
+    cells = []
+    archs = list(ARCHS) if (args.all or args.arch is None) else [args.arch]
+    for a in archs:
+        shapes = applicable_shapes(a) if (args.all or args.shape is None) \
+            else [args.shape]
+        for s in shapes:
+            meshes = [False, True] if (args.all or args.both_meshes) \
+                else [args.multi_pod]
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    failures = []
+    for a, s, mp in cells:
+        try:
+            run_cell(a, s, mp, args.out, grad_accum=args.grad_accum)
+        except Exception as e:
+            failures.append((a, s, mp, repr(e)))
+            print(f"[dryrun] FAILED {a} x {s} x {'multipod' if mp else 'pod'}: {e}")
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

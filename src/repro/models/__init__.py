@@ -1,0 +1,25 @@
+"""Composable model definitions for all assigned architectures."""
+
+from repro.models.config import (
+    ATTN,
+    ATTN_LOCAL,
+    MAMBA,
+    MOE,
+    RECURRENT,
+    ModelConfig,
+)
+from repro.models.lm import (
+    abstract_params,
+    decode_step,
+    forward_train,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)
+
+__all__ = [
+    "ATTN", "ATTN_LOCAL", "MAMBA", "MOE", "RECURRENT", "ModelConfig",
+    "abstract_params", "decode_step", "forward_train", "init_cache",
+    "init_params", "loss_fn", "prefill",
+]

@@ -1,0 +1,229 @@
+"""Attention layers: chunked online-softmax (train/prefill) + cached decode.
+
+The chunked implementation is the production jnp path: it bounds live
+memory to O(S * chunk) per head-batch instead of O(S^2), lowers on every
+backend (the Pallas kernel in repro.kernels.flash_attention is the TPU
+drop-in with identical semantics), and exposes the same GQA / sliding
+window / softcap features.
+
+Sharding strategy (explicit constraints; see EXPERIMENTS.md SPerf for the
+measurement that motivated them): attention operates on the FLAT q-head
+axis, sharded over 'model' when the head count divides the axis;
+k/v stay GQA-compressed in memory and repeat per chunk at compute time
+(the per-chunk repeat is free when heads are sharded — each shard
+materializes only its own groups).  When q-heads don't divide the model
+axis (gemma2's 8, qwen's 40, llava's 56 on a 16-way axis), attention
+computes replicated over 'model' — the honest fallback; GSPMD's
+alternative (sharding head_dim) all-reduces every score chunk, measured
+at 100x the traffic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.constrain import constrain, model_axis_size
+from repro.models.layers import dtype_of, rope
+
+NEG_INF = -1e30
+
+
+def init_attention(cfg, key):
+    d, dh = cfg.d_model, cfg.head_dim_
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    np_ = max(cfg.n_heads_pad, nq)   # padded q heads (zeroed wo rows)
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    dt = dtype_of(cfg)
+    wo = jax.random.normal(ks[3], (nq * dh, d)) * (nq * dh) ** -0.5
+    if np_ > nq:
+        wo = jnp.concatenate([wo, jnp.zeros(((np_ - nq) * dh, d))], axis=0)
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, np_ * dh)) * s).astype(dt),
+        "wk": (jax.random.normal(ks[1], (d, nkv * dh)) * s).astype(dt),
+        "wv": (jax.random.normal(ks[2], (d, nkv * dh)) * s).astype(dt),
+        "wo": wo.astype(dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((np_ * dh,), dt)
+        p["bk"] = jnp.zeros((nkv * dh,), dt)
+        p["bv"] = jnp.zeros((nkv * dh,), dt)
+    return p
+
+
+def _nq(cfg):
+    return max(cfg.n_heads_pad, cfg.n_heads)
+
+
+def _head_axis(cfg):
+    """'model' if the (padded) q-head axis divides the model mesh axis,
+    else None (replicated attention fallback)."""
+    m = model_axis_size()
+    if m and _nq(cfg) % m == 0:
+        return "model"
+    return None
+
+
+def _project_qkv(x, p, cfg, positions):
+    b, s, _ = x.shape
+    dh = cfg.head_dim_
+    ha = _head_axis(cfg)
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = constrain(q.reshape(b, s, _nq(cfg), dh), "dp", None, ha, None)
+    # k/v stay GQA-compressed and replicated over 'model' (small)
+    k = constrain(k.reshape(b, s, cfg.n_kv_heads, dh), "dp", None, None, None)
+    v = constrain(v.reshape(b, s, cfg.n_kv_heads, dh), "dp", None, None, None)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int, softcap: float,
+                      head_axis=None, q_chunk: int = 1024,
+                      kv_chunk: int = 1024):
+    """Online-softmax attention, chunked on both sequence axes.
+
+    q: (B, Sq, Hq, Dh); k/v: (B, Skv, Hkv, Dh).  window <= 0 disables the
+    sliding-window mask.  Returns (B, Sq, Hq, Dh) in q.dtype.
+    """
+    b, sq, hq, dh = q.shape
+    _, skv, hkv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    scale = dh ** -0.5
+    ha = head_axis
+
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    pq = -sq % q_chunk
+    pkv = -skv % kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, pkv), (0, 0), (0, 0))) if pkv else k
+    vp = jnp.pad(v, ((0, 0), (0, pkv), (0, 0), (0, 0))) if pkv else v
+    nq, nkv = (sq + pq) // q_chunk, (skv + pkv) // kv_chunk
+
+    qs = jnp.moveaxis(qp.reshape(b, nq, q_chunk, hq, dh), 1, 0)
+    ks = jnp.moveaxis(kp.reshape(b, nkv, kv_chunk, hkv, dh), 1, 0)
+    vs = jnp.moveaxis(vp.reshape(b, nkv, kv_chunk, hkv, dh), 1, 0)
+    offset = skv - sq  # end-aligned positions
+
+    def q_block(qi, q_c):
+        q_pos = qi * q_chunk + jnp.arange(q_chunk) + offset
+        q_c = constrain(q_c, "dp", None, ha, None)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, k_c, v_c = inp
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            # per-chunk GQA expansion: with heads sharded each device
+            # materializes only its own groups' keys
+            kr = constrain(jnp.repeat(k_c, group, axis=2), "dp", None, ha, None)
+            vr = constrain(jnp.repeat(v_c, group, axis=2), "dp", None, ha, None)
+            s_blk = jnp.einsum("bqhd,bkhd->bhqk", q_c.astype(jnp.float32),
+                               kr.astype(jnp.float32)) * scale
+            s_blk = constrain(s_blk, "dp", ha, None, None)
+            if softcap > 0:
+                s_blk = softcap * jnp.tanh(s_blk / softcap)
+            mask = k_pos[None, :] < skv
+            if causal:
+                mask = mask & (k_pos[None, :] <= q_pos[:, None])
+            if window > 0:
+                mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+            s_blk = jnp.where(mask[None, None], s_blk, NEG_INF)
+            m_cur = jnp.max(s_blk, axis=-1)
+            m_new = jnp.maximum(m, m_cur)
+            p_blk = jnp.exp(s_blk - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = alpha * l + p_blk.sum(axis=-1)
+            acc_new = alpha[..., None] * acc + jnp.einsum(
+                "bhqk,bkhd->bhqd", p_blk, vr.astype(jnp.float32))
+            acc_new = constrain(acc_new, "dp", ha, None, None)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hq, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hq, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hq, q_chunk, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nkv), ks, vs))
+        safe = jnp.where(l == 0.0, 1.0, l)
+        out = acc / safe[..., None]                     # (B, Hq, C, Dh)
+        return jnp.moveaxis(out, 1, 2)                  # (B, C, Hq, Dh)
+
+    outs = jax.lax.map(lambda args: q_block(*args), (jnp.arange(nq), qs))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq + pq, hq, dh)
+    return out[:, :sq].astype(q.dtype)
+
+
+def attention_block(x, p, cfg, positions, *, window: int):
+    """Full attention sublayer for train/prefill (no cache)."""
+    b, s, d = x.shape
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    out = chunked_attention(q, k, v, causal=True, window=window,
+                            softcap=cfg.attn_softcap, head_axis=_head_axis(cfg))
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def attention_prefill(x, p, cfg, positions, *, window: int, cache_len: int):
+    """Prefill: returns output and the (padded) KV cache to serve from."""
+    b, s, d = x.shape
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    out = chunked_attention(q, k, v, causal=True, window=window,
+                            softcap=cfg.attn_softcap, head_axis=_head_axis(cfg))
+    pad = cache_len - s
+    assert pad >= 0, (
+        f"cache_len {cache_len} must cover the full prompt ({s} tokens, "
+        "including any image-prefix embeddings)")
+    k_cache = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    v_cache = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return out.reshape(b, s, -1) @ p["wo"], (k_cache, v_cache)
+
+
+def attention_decode(x, p, cfg, cache, cur_len, *, window: int):
+    """Single-token decode against a static KV cache.
+
+    x: (B, 1, D); cache: (k, v) each (B, Smax, Hkv, Dh); cur_len: scalar.
+    The score einsum keeps the kv SEQUENCE axis contracted last so a
+    sequence-sharded cache (long-context mode) yields partial softmax
+    stats combined by small collectives rather than a cache all-gather.
+    """
+    b, one, d = x.shape
+    dh = cfg.head_dim_
+    group = _nq(cfg) // cfg.n_kv_heads
+    positions = jnp.full((b, 1), cur_len, jnp.int32)
+    q, k_new, v_new = _project_qkv(x, p, cfg, positions)
+    k_cache, v_cache = cache
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new.astype(k_cache.dtype),
+                                           (0, cur_len, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new.astype(v_cache.dtype),
+                                           (0, cur_len, 0, 0))
+    smax = k_cache.shape[1]
+    # sliding-window layers only ever attend to the trailing `window`
+    # positions: slice a static-size view instead of streaming the whole
+    # cache (SPerf iteration C — the decode memory-term optimization)
+    if window > 0 and window < smax:
+        start = jnp.clip(cur_len - window + 1, 0, smax - window)
+        k_att = jax.lax.dynamic_slice_in_dim(k_cache, start, window, axis=1)
+        v_att = jax.lax.dynamic_slice_in_dim(v_cache, start, window, axis=1)
+        k_pos = start + jnp.arange(window)
+    else:
+        k_att, v_att = k_cache, v_cache
+        k_pos = jnp.arange(smax)
+    # scores on GQA-compressed heads: (B, Hkv, G, 1, S_att)
+    qg = q.reshape(b, 1, cfg.n_kv_heads, group, dh).astype(jnp.float32)
+    s_all = jnp.einsum("bqhgd,bkhd->bhgqk", qg,
+                       k_att.astype(jnp.float32)) * dh ** -0.5
+    if cfg.attn_softcap > 0:
+        s_all = cfg.attn_softcap * jnp.tanh(s_all / cfg.attn_softcap)
+    mask = k_pos <= cur_len
+    if window > 0:
+        mask = mask & (k_pos > cur_len - window)
+    s_all = jnp.where(mask[None, None, None, None, :], s_all, NEG_INF)
+    w = jax.nn.softmax(s_all, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v_att.astype(jnp.float32))
+    out = out.reshape(b, 1, -1).astype(x.dtype) @ p["wo"]
+    return out, (k_cache, v_cache)

@@ -1,0 +1,108 @@
+"""Shared building blocks: norms, activations, RoPE, MLP, initializers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.param_dtype)
+
+
+def rms_norm(x, scale, eps: float):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(x, p, cfg):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+def init_norm(cfg, key):
+    d = cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), dtype_of(cfg)),
+                "bias": jnp.zeros((d,), dtype_of(cfg))}
+    return {"scale": jnp.zeros((d,), dtype_of(cfg))}
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+# --------------------------------------------------------------------- #
+# RoPE
+# --------------------------------------------------------------------- #
+def rope(x, positions, theta: float):
+    """Apply rotary embeddings.
+
+    x: (..., S, H, Dh) with Dh even; positions: (..., S) int32.
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# gated MLP (SwiGLU / GeGLU)
+# --------------------------------------------------------------------- #
+def init_mlp(cfg, key, d_ff: int | None = None):
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d ** -0.5
+    s_out = f ** -0.5
+    dt = dtype_of(cfg)
+    p = {
+        "up": (jax.random.normal(k2, (d, f)) * s_in).astype(dt),
+        "down": (jax.random.normal(k3, (f, d)) * s_out).astype(dt),
+    }
+    if cfg.mlp_gated:
+        p["gate"] = (jax.random.normal(k1, (d, f)) * s_in).astype(dt)
+    return p
+
+
+def mlp(x, p, cfg):
+    a = act_fn(cfg.act)
+    if cfg.mlp_gated:
+        h = a(x @ p["gate"]) * (x @ p["up"])
+    else:
+        h = a(x @ p["up"])
+    return h @ p["down"]
+
+
+def causal_conv1d(x, w, state=None):
+    """Depthwise causal temporal conv.
+
+    x: (B, S, D); w: (D, K).  If ``state`` is given — (B, K-1, D), the
+    trailing inputs of the previous chunk — returns (y, new_state) for
+    streaming decode; otherwise zero-history.
+    """
+    b, s, d = x.shape
+    k = w.shape[1]
+    if state is None:
+        state = jnp.zeros((b, k - 1, d), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)        # (B, S+K-1, D)
+    y = jnp.zeros((b, s, d), jnp.float32)
+    for i in range(k):
+        y = y + xx[:, i:i + s, :].astype(jnp.float32) * w[:, i].astype(jnp.float32)
+    new_state = xx[:, -(k - 1):, :] if k > 1 else jnp.zeros((b, 0, d), x.dtype)
+    return y.astype(x.dtype), new_state

@@ -1,0 +1,410 @@
+"""The composable decoder-only LM covering all assigned architectures.
+
+Layer stack = ``layer_pattern * n_rep + tail``.  The repeated pattern is a
+*super-block* scanned with stacked parameters (lax.scan keeps HLO size and
+compile time flat in depth — essential for 64-layer configs on the
+dry-run), optionally rematerialized.  The tail (pattern remainder, e.g.
+recurrentgemma's trailing recurrent layers) is unrolled.
+
+Entry points:
+    init_params / abstract_params      parameters (concrete / eval_shape)
+    forward_train                      full-sequence logits-loss path
+    prefill                            forward + KV/state cache construction
+    decode_step                        single-token cached decode
+    loss_fn                            seq-chunked CE (never materializes
+                                       the full (B, S, V) logits tensor)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba as mam
+from repro.models import moe as moe_mod
+from repro.models import rglru as rgl
+from repro.models.config import ATTN, ATTN_LOCAL, MAMBA, MOE, RECURRENT, ModelConfig
+from repro.models.layers import apply_norm, dtype_of, init_mlp, init_norm, mlp
+
+
+# --------------------------------------------------------------------- #
+# per-layer init / apply
+# --------------------------------------------------------------------- #
+def init_layer(cfg: ModelConfig, key, kind: str):
+    ks = jax.random.split(key, 4)
+    if kind in (ATTN, ATTN_LOCAL):
+        p = {"norm1": init_norm(cfg, ks[0]),
+             "attn": attn.init_attention(cfg, ks[1]),
+             "norm2": init_norm(cfg, ks[2]),
+             "mlp": init_mlp(cfg, ks[3])}
+    elif kind == MOE:
+        p = {"norm1": init_norm(cfg, ks[0]),
+             "attn": attn.init_attention(cfg, ks[1]),
+             "norm2": init_norm(cfg, ks[2]),
+             "moe": moe_mod.init_moe(cfg, ks[3])}
+    elif kind == MAMBA:
+        p = {"norm1": init_norm(cfg, ks[0]),
+             "mamba": mam.init_mamba(cfg, ks[1])}
+    elif kind == RECURRENT:
+        p = {"norm1": init_norm(cfg, ks[0]),
+             "rec": rgl.init_recurrent(cfg, ks[1]),
+             "norm2": init_norm(cfg, ks[2]),
+             "mlp": init_mlp(cfg, ks[3])}
+    else:
+        raise ValueError(kind)
+    if cfg.use_post_norm:
+        p["post_norm1"] = init_norm(cfg, jax.random.fold_in(key, 7))
+        p["post_norm2"] = init_norm(cfg, jax.random.fold_in(key, 8))
+    return p
+
+
+def _apply_layer(x, p, cfg: ModelConfig, kind: str, positions):
+    """Train/prefill sub-layer application (no cache)."""
+    window = cfg.window_size if kind == ATTN_LOCAL else 0
+    aux = jnp.zeros((), jnp.float32)
+    if kind in (ATTN, ATTN_LOCAL, MOE):
+        h = attn.attention_block(apply_norm(x, p["norm1"], cfg), p["attn"],
+                                 cfg, positions, window=window)
+        if cfg.use_post_norm:
+            h = apply_norm(h, p["post_norm1"], cfg)
+        x = x + h
+        y = apply_norm(x, p["norm2"], cfg)
+        if kind == MOE:
+            h, aux = moe_mod.moe_mlp(y, p["moe"], cfg)
+        else:
+            h = mlp(y, p["mlp"], cfg)
+        if cfg.use_post_norm:
+            h = apply_norm(h, p["post_norm2"], cfg)
+        x = x + h
+    elif kind == MAMBA:
+        x = x + mam.mamba_block(apply_norm(x, p["norm1"], cfg), p["mamba"], cfg)
+    elif kind == RECURRENT:
+        x = x + rgl.recurrent_block(apply_norm(x, p["norm1"], cfg), p["rec"], cfg)
+        x = x + mlp(apply_norm(x, p["norm2"], cfg), p["mlp"], cfg)
+    return x, aux
+
+
+# --------------------------------------------------------------------- #
+# parameters
+# --------------------------------------------------------------------- #
+def init_params(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 8)
+    dt = dtype_of(cfg)
+    d, v = cfg.d_model, cfg.vocab_size
+    ncb = max(cfg.num_codebooks, 1)
+    if cfg.num_codebooks:
+        embed = (jax.random.normal(ks[0], (ncb, v, d)) * d ** -0.5).astype(dt)
+    else:
+        embed = (jax.random.normal(ks[0], (v, d)) * d ** -0.5).astype(dt)
+
+    def init_stacked(kind, pos):
+        keys = jax.random.split(jax.random.fold_in(ks[1], pos), cfg.n_rep)
+        return jax.vmap(lambda k: init_layer(cfg, k, kind))(keys)
+
+    stack = tuple(init_stacked(kind, i)
+                  for i, kind in enumerate(cfg.layer_pattern))
+    tail = tuple(init_layer(cfg, jax.random.fold_in(ks[2], i), kind)
+                 for i, kind in enumerate(cfg.tail_types))
+    params = {"embed": embed, "stack": stack, "tail": tail,
+              "final_norm": init_norm(cfg, ks[3])}
+    if not cfg.tie_embeddings:
+        if cfg.num_codebooks:
+            params["head"] = (jax.random.normal(ks[4], (ncb, d, v)) * d ** -0.5).astype(dt)
+        else:
+            params["head"] = (jax.random.normal(ks[4], (d, v)) * d ** -0.5).astype(dt)
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs without allocating (for the dry-run)."""
+    return jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.PRNGKey(0))
+
+
+# --------------------------------------------------------------------- #
+# embedding / head
+# --------------------------------------------------------------------- #
+def embed_tokens(params, tokens, cfg: ModelConfig, img_embeds=None):
+    if cfg.num_codebooks:
+        # tokens: (B, S, K) -> sum of per-codebook embeddings
+        parts = [jnp.take(params["embed"][k], tokens[..., k], axis=0)
+                 for k in range(cfg.num_codebooks)]
+        x = sum(parts)
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if img_embeds is not None:
+        x = jnp.concatenate([img_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def _head_matrix(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        e = params["embed"]
+        return jnp.swapaxes(e, -1, -2) if cfg.num_codebooks else e.T
+    return params["head"]
+
+
+def logits_for(params, x, cfg: ModelConfig):
+    """Logits for a (B, S', D) activation slice."""
+    h = _head_matrix(params, cfg)
+    if cfg.num_codebooks:
+        out = jnp.einsum("bsd,kdv->bskv", x, h)
+    else:
+        out = x @ h
+    out = out.astype(jnp.float32)
+    if cfg.final_softcap > 0:
+        out = cfg.final_softcap * jnp.tanh(out / cfg.final_softcap)
+    return out
+
+
+# --------------------------------------------------------------------- #
+# stack runners
+# --------------------------------------------------------------------- #
+def run_stack(x, params, cfg: ModelConfig, positions, remat: bool = True):
+    """Apply all layers (train/prefill, no cache).  Returns (x, aux_sum)."""
+
+    def superblock(carry, block_params):
+        x, aux = carry
+        for kind, p in zip(cfg.layer_pattern, block_params):
+            x, a = _apply_layer(x, p, cfg, kind, positions)
+            aux = aux + a
+        return (x, aux), None
+
+    body = jax.checkpoint(superblock) if remat else superblock
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["stack"])
+    for kind, p in zip(cfg.tail_types, params["tail"]):
+        x, a = _apply_layer(x, p, cfg, kind, positions)
+        aux = aux + a
+    return x, aux
+
+
+def forward_train(params, tokens, cfg: ModelConfig, img_embeds=None,
+                  remat: bool = True):
+    """Full-sequence activations (pre-head).  Returns (x, aux)."""
+    x = embed_tokens(params, tokens, cfg, img_embeds)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, aux = run_stack(x, params, cfg, positions, remat=remat)
+    x = apply_norm(x, params["final_norm"], cfg)
+    return x, aux
+
+
+# --------------------------------------------------------------------- #
+# loss (sequence-chunked CE; vocab stays sharded)
+# --------------------------------------------------------------------- #
+def loss_fn(params, batch, cfg: ModelConfig, seq_chunk: int = 512,
+            remat: bool = True):
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    img = batch.get("img_embeds")
+    x, aux = forward_train(params, tokens, cfg, img_embeds=img, remat=remat)
+    if img is not None:
+        x = x[:, img.shape[1]:]  # loss only over text positions
+    # next-token shift
+    x = x[:, :-1]
+    y = labels[:, 1:] if cfg.num_codebooks == 0 else labels[:, 1:, :]
+    b, s = x.shape[:2]
+    seq_chunk = min(seq_chunk, s)
+    pad = -s % seq_chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        y = jnp.pad(y, ((0, 0), (0, pad)) + ((0, 0),) * (y.ndim - 2),
+                    constant_values=-1)
+    nc = (s + pad) // seq_chunk
+    xc = jnp.moveaxis(x.reshape(b, nc, seq_chunk, -1), 1, 0)
+    yc = jnp.moveaxis(y.reshape((b, nc, seq_chunk) + y.shape[2:]), 1, 0)
+
+    def chunk_loss(carry, inp):
+        xi, yi = inp
+        lg = logits_for(params, xi, cfg)               # (B, C, [K,] V)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        valid = yi >= 0
+        tgt = jnp.take_along_axis(lg, jnp.maximum(yi, 0)[..., None],
+                                  axis=-1)[..., 0]
+        nll = jnp.where(valid, lse - tgt, 0.0)
+        return (carry[0] + nll.sum(), carry[1] + valid.sum()), None
+
+    body = jax.checkpoint(chunk_loss) if remat else chunk_loss
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        (xc, yc))
+    loss = tot / jnp.maximum(cnt, 1)
+    return loss + 0.01 * aux
+
+
+# --------------------------------------------------------------------- #
+# serving: cache init / prefill / decode
+# --------------------------------------------------------------------- #
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Zeroed decode state for every layer, stacked like the params."""
+    def one(kind):
+        if kind in (ATTN, ATTN_LOCAL, MOE):
+            shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim_)
+            return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+        if kind == MAMBA:
+            return mam.init_mamba_state(cfg, batch)
+        if kind == RECURRENT:
+            return rgl.init_recurrent_state(cfg, batch)
+        raise ValueError(kind)
+
+    def stacked(kind):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.n_rep,) + a.shape),
+                            one(kind))
+
+    return {"stack": tuple(stacked(k) for k in cfg.layer_pattern),
+            "tail": tuple(one(k) for k in cfg.tail_types)}
+
+
+def _decode_layer(x, p, cfg, kind, cache, cur_len):
+    window = cfg.window_size if kind == ATTN_LOCAL else 0
+    if kind in (ATTN, ATTN_LOCAL, MOE):
+        h, (k, v) = attn.attention_decode(
+            apply_norm(x, p["norm1"], cfg), p["attn"], cfg,
+            (cache["k"], cache["v"]), cur_len, window=window)
+        if cfg.use_post_norm:
+            h = apply_norm(h, p["post_norm1"], cfg)
+        x = x + h
+        y = apply_norm(x, p["norm2"], cfg)
+        if kind == MOE:
+            h, _ = moe_mod.moe_mlp(y, p["moe"], cfg)
+        else:
+            h = mlp(y, p["mlp"], cfg)
+        if cfg.use_post_norm:
+            h = apply_norm(h, p["post_norm2"], cfg)
+        x = x + h
+        return x, {"k": k, "v": v}
+    if kind == MAMBA:
+        h, st = mam.mamba_decode(apply_norm(x, p["norm1"], cfg), p["mamba"],
+                                 cfg, cache)
+        return x + h, st
+    if kind == RECURRENT:
+        h, st = rgl.recurrent_decode(apply_norm(x, p["norm1"], cfg), p["rec"],
+                                     cfg, cache)
+        x = x + h
+        x = x + mlp(apply_norm(x, p["norm2"], cfg), p["mlp"], cfg)
+        return x, st
+    raise ValueError(kind)
+
+
+def decode_step(params, tokens, cache, cur_len, cfg: ModelConfig):
+    """One new token for every sequence in the batch.
+
+    tokens: (B, 1) or (B, 1, K); cur_len: scalar int32.
+    Returns (logits (B, 1, [K,] V), new_cache).
+    """
+    x = embed_tokens(params, tokens, cfg)
+
+    def superblock(x, inp):
+        block_params, block_cache = inp
+        new_cache = []
+        for kind, p, c in zip(cfg.layer_pattern, block_params, block_cache):
+            x, nc = _decode_layer(x, p, cfg, kind, c, cur_len)
+            new_cache.append(nc)
+        return x, tuple(new_cache)
+
+    x, new_stack = jax.lax.scan(superblock, x,
+                                (params["stack"], cache["stack"]))
+    new_tail = []
+    for kind, p, c in zip(cfg.tail_types, params["tail"], cache["tail"]):
+        x, nc = _decode_layer(x, p, cfg, kind, c, cur_len)
+        new_tail.append(nc)
+    x = apply_norm(x, params["final_norm"], cfg)
+    logits = logits_for(params, x, cfg)
+    return logits, {"stack": new_stack, "tail": tuple(new_tail)}
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len: int, img_embeds=None):
+    """Process the prompt; returns (last-token logits, cache, prompt_len).
+
+    Built on the train-path layers plus per-layer state extraction; the
+    attention caches are padded to ``max_len``.
+    """
+    x = embed_tokens(params, tokens, cfg, img_embeds)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def prefill_layer(x, p, kind):
+        window = cfg.window_size if kind == ATTN_LOCAL else 0
+        if kind in (ATTN, ATTN_LOCAL, MOE):
+            h, (k, v) = attn.attention_prefill(
+                apply_norm(x, p["norm1"], cfg), p["attn"], cfg, positions,
+                window=window, cache_len=max_len)
+            if cfg.use_post_norm:
+                h = apply_norm(h, p["post_norm1"], cfg)
+            x = x + h
+            y = apply_norm(x, p["norm2"], cfg)
+            h = moe_mod.moe_mlp(y, p["moe"], cfg)[0] if kind == MOE \
+                else mlp(y, p["mlp"], cfg)
+            if cfg.use_post_norm:
+                h = apply_norm(h, p["post_norm2"], cfg)
+            return x + h, {"k": k, "v": v}
+        if kind == MAMBA:
+            y = apply_norm(x, p["norm1"], cfg)
+            h, st = _mamba_prefill(y, p["mamba"], cfg)
+            return x + h, st
+        if kind == RECURRENT:
+            y = apply_norm(x, p["norm1"], cfg)
+            h, st = _recurrent_prefill(y, p["rec"], cfg)
+            x = x + h
+            return x + mlp(apply_norm(x, p["norm2"], cfg), p["mlp"], cfg), st
+        raise ValueError(kind)
+
+    def superblock(x, block_params):
+        caches = []
+        for kind, p in zip(cfg.layer_pattern, block_params):
+            x, c = prefill_layer(x, p, kind)
+            caches.append(c)
+        return x, tuple(caches)
+
+    x, stack_cache = jax.lax.scan(superblock, x, params["stack"])
+    tail_cache = []
+    for kind, p in zip(cfg.tail_types, params["tail"]):
+        x, c = prefill_layer(x, p, kind)
+        tail_cache.append(c)
+    x = apply_norm(x, params["final_norm"], cfg)
+    logits = logits_for(params, x[:, -1:], cfg)
+    return logits, {"stack": stack_cache, "tail": tuple(tail_cache)}
+
+
+def _mamba_prefill(y, p, cfg):
+    """Mamba block over the prompt + final state for decode continuation."""
+    out = mam.mamba_block(y, p, cfg)
+    # final conv state: last K-1 pre-activation conv inputs
+    u = (y @ p["in_proj"])[..., :cfg.d_inner]
+    conv = u[:, -(cfg.ssm_conv - 1):, :]
+    # final ssm state: replay the scan cheaply on the last chunk only is
+    # incorrect in general; recompute exactly with a scan that keeps only h.
+    from repro.models.layers import causal_conv1d
+    uc, _ = causal_conv1d(u, p["conv_w"])
+    uc = jax.nn.silu(uc)
+    delta, b_in, c_in = mam._ssm_inputs(uc, p, cfg)
+    A = -jnp.exp(p["A_log"])
+
+    def step(h, xs):
+        u_t, d_t, b_t = xs
+        coef = jnp.exp(d_t[..., None] * A[None])
+        return coef * h + (d_t * u_t)[..., None] * b_t[:, None, :], None
+
+    h0 = jnp.zeros((y.shape[0], cfg.d_inner, cfg.ssm_state), jnp.float32)
+    h, _ = jax.lax.scan(step, h0, (jnp.moveaxis(uc.astype(jnp.float32), 1, 0),
+                                   jnp.moveaxis(delta.astype(jnp.float32), 1, 0),
+                                   jnp.moveaxis(b_in.astype(jnp.float32), 1, 0)))
+    return out, {"conv": conv.astype(jnp.float32), "ssm": h}
+
+
+def _recurrent_prefill(y, p, cfg):
+    from repro.models.layers import causal_conv1d
+    gate = jax.nn.gelu((y @ p["in_gate"]).astype(jnp.float32)).astype(y.dtype)
+    z = y @ p["in_lin"]
+    zc, conv = causal_conv1d(z, p["conv_w"])
+    a, i = rgl._gates(zc, p)
+    u = i * zc.astype(jnp.float32)
+    h = rgl.rglru_ref(u, a)
+    out = (h.astype(y.dtype) * gate) @ p["out_proj"]
+    return out, {"conv": conv.astype(jnp.float32), "h": h[:, -1]}

@@ -1,0 +1,86 @@
+"""Griffin recurrent block (recurrentgemma): conv + RG-LRU gated recurrence.
+
+Block layout (Griffin, arXiv:2402.19427 fig. 2): two input branches —
+GeLU gate branch and a temporal branch (causal conv1d -> RG-LRU) — merged
+multiplicatively, then projected out.  The RG-LRU recurrence:
+
+    r_t = sigmoid(W_a y_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x y_t + b_x)          (input gate)
+    log a_t = -c * softplus(Lambda) * r_t  (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * y_t)
+
+Train/prefill uses the associative scan (repro.kernels.rglru_scan.ref,
+TPU drop-in kernel available); decode is the single-step update.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan.ref import rglru_ref
+from repro.models.layers import causal_conv1d, dtype_of
+
+RGLRU_C = 8.0
+
+
+def init_recurrent(cfg, key):
+    d, w = cfg.d_model, cfg.lru_width_
+    kc = cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    dt = dtype_of(cfg)
+    s = d ** -0.5
+    return {
+        "in_gate": (jax.random.normal(ks[0], (d, w)) * s).astype(dt),
+        "in_lin": (jax.random.normal(ks[1], (d, w)) * s).astype(dt),
+        "conv_w": (jax.random.normal(ks[2], (w, kc)) * kc ** -0.5).astype(dt),
+        "wa": (jax.random.normal(ks[3], (w, w)) * w ** -0.5).astype(dt),
+        "ba": jnp.zeros((w,), jnp.float32),
+        "wx": (jax.random.normal(ks[4], (w, w)) * w ** -0.5).astype(dt),
+        "bx": jnp.zeros((w,), jnp.float32),
+        # Lambda init so a^c spans ~(0.9, 0.999) (Griffin appendix)
+        "lam": jnp.log(jnp.expm1(
+            jnp.linspace(0.35, 0.9, w).astype(jnp.float32))),
+        "out_proj": (jax.random.normal(ks[5], (w, d)) * w ** -0.5).astype(dt),
+    }
+
+
+def _gates(y, p):
+    r = jax.nn.sigmoid((y @ p["wa"]).astype(jnp.float32) + p["ba"])
+    i = jax.nn.sigmoid((y @ p["wx"]).astype(jnp.float32) + p["bx"])
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    return a, i
+
+
+def recurrent_block(x, p, cfg):
+    """Train/prefill forward.  x: (B, S, D) -> (B, S, D)."""
+    gate = jax.nn.gelu((x @ p["in_gate"]).astype(jnp.float32)).astype(x.dtype)
+    y = x @ p["in_lin"]
+    y, _ = causal_conv1d(y, p["conv_w"])
+    a, i = _gates(y, p)
+    u = i * y.astype(jnp.float32)
+    h = rglru_ref(u, a)                                   # (B, S, W) f32
+    out = (h.astype(x.dtype) * gate) @ p["out_proj"]
+    return out
+
+
+def init_recurrent_state(cfg, batch, dtype=jnp.float32):
+    w = cfg.lru_width_
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, w), dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def recurrent_decode(x, p, cfg, state):
+    """Single-token decode.  x: (B, 1, D) -> (out, new_state)."""
+    gate = jax.nn.gelu((x @ p["in_gate"]).astype(jnp.float32)).astype(x.dtype)
+    y = x @ p["in_lin"]
+    y, conv_state = causal_conv1d(y, p["conv_w"], state["conv"])
+    a, i = _gates(y, p)                                   # (B, 1, W)
+    u = i[:, 0] * y[:, 0].astype(jnp.float32)
+    a0 = a[:, 0]
+    h = a0 * state["h"] + jnp.sqrt(jnp.maximum(1.0 - a0 * a0, 0.0)) * u
+    out = (h[:, None].astype(x.dtype) * gate) @ p["out_proj"]
+    return out, {"conv": conv_state, "h": h}

@@ -1,0 +1,58 @@
+"""Simulated Lustre-like parallel file system substrate.
+
+This package provides a deterministic, seedable, discrete-time queueing
+model of the Lustre client I/O path described in the DIAL paper (SII):
+
+    application --> LLITE --> LOV --> OSC (per OST) --> RPC --> OST
+
+The model is intentionally *fluid* (aggregate counters per tick rather than
+per-RPC event objects) so that offline training-data collection — thousands
+of simulated seconds across many workload x contention scenarios — runs in
+seconds on one CPU core while still reproducing the qualitative regimes the
+paper's tuner exploits:
+
+* per-RPC fixed overhead (setup + RTT) makes *large* RPC windows win for
+  large sequential streams (bandwidth-bound);
+* the OSC *holds* partially-filled RPCs hoping to fill the window, so an
+  oversized window under small/random I/O starves the RPC channels
+  (the paper's SII-B motivation);
+* an OST-side setup server (IOPS ceiling) makes many tiny RPCs waste
+  service capacity;
+* shared OST bandwidth + per-client NIC caps create cross-client
+  contention, so the optimum (window, in-flight) shifts with global load —
+  the signal DIAL senses through purely local metrics;
+* the write path adds grants and a dirty-page cache: writes complete into
+  the cache until it fills, then the app throttles to the flush rate.
+
+Public API:
+    SimParams, PFSSim          -- engine (repro.pfs.engine)
+    Workload + generators      -- repro.pfs.workloads
+    OSCStats snapshots         -- repro.pfs.stats
+    TUNABLE knobs              -- window_pages / rpcs_in_flight per OSC
+"""
+
+from repro.pfs.engine import PFSSim, SimParams, PAGE_SIZE
+from repro.pfs.workloads import (
+    Workload,
+    sequential_stream,
+    random_stream,
+    strided_stream,
+    vpic_write,
+    bdcats_read,
+    dlio_reader,
+)
+from repro.pfs.stats import OSCStats
+
+__all__ = [
+    "PFSSim",
+    "SimParams",
+    "PAGE_SIZE",
+    "Workload",
+    "sequential_stream",
+    "random_stream",
+    "strided_stream",
+    "vpic_write",
+    "bdcats_read",
+    "dlio_reader",
+    "OSCStats",
+]

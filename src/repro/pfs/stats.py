@@ -1,0 +1,72 @@
+"""Raw client-local statistics probing — the simulated ``/proc/fs/lustre``.
+
+``probe()`` copies the cumulative counters one Lustre client can read for
+one of its OSC interfaces *without touching the shared file system* (the
+paper's core constraint, SIII-A/SIV-C).  DIAL's preprocessor
+(:mod:`repro.core.metrics`) turns two consecutive probes into the designed
+interval metrics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class OSCStats:
+    """Cumulative counters for one OSC interface at one instant.
+
+    Mirrors Lustre's ``osc.*.rpc_stats`` / ``osc.*.stats`` /
+    ``llite.*.read_ahead_stats`` surface, per operation where relevant.
+    Arrays indexed by op: 0=read, 1=write.
+    """
+
+    t: float
+    bytes_done: np.ndarray          # app-visible completed bytes
+    rpcs_sent: np.ndarray
+    rpc_bytes: np.ndarray
+    partial_rpcs: np.ndarray
+    latency_sum: np.ndarray
+    rpcs_done: np.ndarray
+    req_count: np.ndarray
+    req_bytes: np.ndarray
+    pending_integral: np.ndarray
+    active_integral: np.ndarray
+    cache_hit_bytes: float
+    block_time: float
+    dirty_integral: float
+    grant_integral: float
+    randomness: np.ndarray          # client-side offset-jump estimate
+    window_pages: int               # knob currently applied
+    rpcs_in_flight: int
+
+
+def probe(sim, osc: int) -> OSCStats:
+    """Snapshot the cumulative counters of one OSC (cheap, local-only)."""
+    return OSCStats(
+        t=sim.now,
+        bytes_done=sim.ctr_bytes_done[:, osc].copy(),
+        rpcs_sent=sim.ctr_rpcs_sent[:, osc].copy(),
+        rpc_bytes=sim.ctr_rpc_bytes[:, osc].copy(),
+        partial_rpcs=sim.ctr_partial_rpcs[:, osc].copy(),
+        latency_sum=sim.ctr_latency_sum[:, osc].copy(),
+        rpcs_done=sim.ctr_rpcs_done[:, osc].copy(),
+        req_count=sim.ctr_req_count[:, osc].copy(),
+        req_bytes=sim.ctr_req_bytes[:, osc].copy(),
+        pending_integral=sim.ctr_pending_integral[:, osc].copy(),
+        active_integral=sim.ctr_active_integral[:, osc].copy(),
+        cache_hit_bytes=float(sim.ctr_cache_hit_bytes[osc]),
+        block_time=float(sim.ctr_block_time[osc]),
+        dirty_integral=float(sim.ctr_dirty_integral[osc]),
+        grant_integral=float(sim.ctr_grant_integral[osc]),
+        randomness=sim.randomness[:, osc].copy(),
+        window_pages=int(sim.window_pages[osc]),
+        rpcs_in_flight=int(sim.rpcs_in_flight[osc]),
+    )
+
+
+def probe_client(sim, client: int) -> dict:
+    """Probe every OSC interface of one client (what a DIAL agent sees)."""
+    return {int(osc): probe(sim, int(osc)) for osc in sim.client_oscs(client)}

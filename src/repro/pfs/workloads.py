@@ -1,0 +1,168 @@
+"""Workload generators driving the PFS simulator.
+
+Each workload models one application process group on one client:
+closed-loop reader threads (issue -> wait -> issue, like POSIX sync reads)
+or rate-capped writer threads (writes complete into the dirty cache until
+it fills, after which the engine blocks them — Lustre's grant/dirty rule).
+
+Generators mirror the paper's evaluation workloads:
+
+* filebench-like single streams (SIV-A): sequential/random x 8K/1MB/16MB,
+  one process, one OST — the offline training distribution;
+* H5bench VPIC-IO (contiguous 1/2/3-D array writes) and BDCATS-IO
+  (partial/strided/full reads) — Table II;
+* DLIO BERT / Megatron read kernels with variable thread counts and OST
+  spans — Fig. 3.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.pfs.engine import READ, WRITE
+
+
+@dataclasses.dataclass
+class Workload:
+    """A closed/open-loop I/O stream bound to one (client, op) pair.
+
+    Attributes:
+        client: client index in the sim.
+        op: READ or WRITE.
+        req_size: application request size in bytes.
+        randomness: 0.0 = perfectly sequential offsets, 1.0 = uniform random.
+        n_threads: concurrent application threads (closed-loop depth).
+        osts: OST indices the file stripes over (stripe_count = len(osts)).
+        thread_rate: per-thread issue ceiling [B/s] (CPU-side cost; writers).
+        duty_cycle / period: optional on/off bursting (DLIO epochs).
+    """
+
+    client: int
+    op: int
+    req_size: float
+    randomness: float
+    n_threads: int = 1
+    osts: tuple = (0,)
+    thread_rate: float = 1.2e9
+    duty_cycle: float = 1.0
+    period: float = 10.0
+    name: str = "workload"
+
+    def bind(self, sim) -> None:
+        self._osc_ids = np.array([sim.osc_id(self.client, t) for t in self.osts])
+        self._issued = 0.0
+        self._done_base = float(sim.ctr_bytes_done[self.op, self._osc_ids].sum())
+        self._rr = 0
+
+    # ------------------------------------------------------------------ #
+    def _active(self, sim) -> bool:
+        if self.duty_cycle >= 1.0:
+            return True
+        return (sim.now % self.period) < self.duty_cycle * self.period
+
+    def done_bytes(self, sim) -> float:
+        return float(sim.ctr_bytes_done[self.op, self._osc_ids].sum()) - self._done_base
+
+    def tick(self, sim, dt: float) -> None:
+        if not self._active(sim):
+            return
+        if self.op == READ:
+            # closed loop: keep n_threads * req_size bytes outstanding.
+            # Sequential streams get extra depth from client readahead,
+            # which pipelines ahead of the application threads.
+            seq = 1.0 - self.randomness
+            depth = (self.n_threads * self.req_size
+                     + seq * sim.params.readahead_bytes * len(self._osc_ids))
+            outstanding = self._issued - self.done_bytes(sim)
+            want = depth - outstanding
+            # a thread can re-issue at most thread_rate anyway
+            want = min(max(want, 0.0), self.n_threads * self.thread_rate * dt)
+            if want <= 0:
+                return
+            self._issue(sim, want)
+        else:
+            # writers throttle while the dirty cache / grants are exhausted
+            if sim.write_blocked[self._osc_ids].any():
+                return
+            want = self.n_threads * self.thread_rate * dt
+            self._issue(sim, want)
+
+    def _issue(self, sim, nbytes: float) -> None:
+        self._issued += nbytes
+        per = nbytes / len(self._osc_ids)
+        for osc in self._osc_ids:
+            if self.op == READ:
+                sim.submit_read(int(osc), per, self.randomness, self.req_size)
+            else:
+                got = sim.submit_write(int(osc), per, self.randomness, self.req_size)
+                # blocked bytes are retried by the engine; stop counting them
+                self._issued -= per - got
+
+
+# ---------------------------------------------------------------------- #
+# paper workload presets
+# ---------------------------------------------------------------------- #
+def sequential_stream(client: int, op: int, req_size: float, ost: int = 0,
+                      n_threads: int = 1) -> Workload:
+    """Filebench single-stream sequential pattern (training distribution)."""
+    return Workload(client=client, op=op, req_size=req_size, randomness=0.0,
+                    n_threads=n_threads, osts=(ost,),
+                    name=f"seq_{'r' if op == READ else 'w'}_{int(req_size)}")
+
+
+def random_stream(client: int, op: int, req_size: float, ost: int = 0,
+                  n_threads: int = 1) -> Workload:
+    """Filebench single-stream random pattern (training distribution)."""
+    return Workload(client=client, op=op, req_size=req_size, randomness=1.0,
+                    n_threads=n_threads, osts=(ost,),
+                    name=f"rand_{'r' if op == READ else 'w'}_{int(req_size)}")
+
+
+def strided_stream(client: int, op: int, req_size: float, ost: int = 0,
+                   n_threads: int = 1) -> Workload:
+    return Workload(client=client, op=op, req_size=req_size, randomness=0.5,
+                    n_threads=n_threads, osts=(ost,), name="strided")
+
+
+def vpic_write(client: int, dims: int, osts=(0, 1, 2, 3)) -> Workload:
+    """H5bench VPIC-IO: contiguous particle array writes.
+
+    Higher dimensionality fragments the contiguous runs slightly (HDF5
+    chunking), which we model as mild randomness growth.
+    """
+    req = {1: 16 * 2**20, 2: 8 * 2**20, 3: 4 * 2**20}[dims]
+    rnd = {1: 0.0, 2: 0.06, 3: 0.12}[dims]
+    return Workload(client=client, op=WRITE, req_size=req, randomness=rnd,
+                    n_threads=4, osts=tuple(osts), name=f"vpic_{dims}d")
+
+
+def bdcats_read(client: int, mode: str, osts=(0, 1, 2, 3)) -> Workload:
+    """H5bench BDCATS-IO: reads the VPIC output back (partial/strided/full)."""
+    cfg = {
+        "partial": dict(req_size=1 * 2**20, randomness=0.55, n_threads=4),
+        "strided": dict(req_size=2 * 2**20, randomness=0.35, n_threads=4),
+        "full": dict(req_size=16 * 2**20, randomness=0.0, n_threads=4),
+    }[mode]
+    return Workload(client=client, op=READ, osts=tuple(osts),
+                    name=f"bdcats_{mode}", **cfg)
+
+
+def dlio_reader(client: int, model: str, n_threads: int, osts=(0,)) -> Workload:
+    """DLIO deep-learning read kernels (Fig. 3).
+
+    BERT: many smallish TFRecord-style reads, shuffled access (random-ish).
+    Megatron: larger sequential-ish sample reads from indexed .bin files.
+    Both run in epoch bursts (read batch, compute step, repeat).
+    """
+    if model == "bert":
+        # BERT TFRecord shards: many small records, shuffled access
+        return Workload(client=client, op=READ, req_size=64 * 2**10,
+                        randomness=0.9, n_threads=n_threads, osts=tuple(osts),
+                        duty_cycle=0.85, period=4.0, name=f"dlio_bert_t{n_threads}")
+    if model == "megatron":
+        return Workload(client=client, op=READ, req_size=2 * 2**20,
+                        randomness=0.25, n_threads=n_threads, osts=tuple(osts),
+                        duty_cycle=0.9, period=6.0, name=f"dlio_megatron_t{n_threads}")
+    raise ValueError(f"unknown DLIO model {model!r}")

@@ -1,0 +1,3 @@
+"""Training: optimizer, step builders, trainer loop."""
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+from repro.train.steps import make_decode_step, make_prefill_step, make_train_step

@@ -1,0 +1,69 @@
+"""Train / prefill / decode step builders (the functions the launcher jits).
+
+``make_train_step`` supports gradient-accumulation microbatching: the
+global batch reshapes to (n_micro, micro, ...) and a lax.scan accumulates
+f32 gradients — live activation memory scales with the microbatch while
+arithmetic stays identical.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    grad_accum: int = 1, remat: bool = True):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+
+    def loss(p, mb):
+        return lm.loss_fn(p, mb, cfg, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            l, grads = jax.value_and_grad(loss)(params, batch)
+        else:
+            def micro(i, b):
+                return jax.tree.map(
+                    lambda x: x.reshape((grad_accum, -1) + x.shape[1:])[i], b)
+
+            def acc_step(carry, i):
+                tot_l, g_acc = carry
+                l, g = jax.value_and_grad(loss)(params, micro(i, batch))
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (tot_l + l, g_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (tot_l, grads), _ = jax.lax.scan(
+                acc_step, (jnp.zeros((), jnp.float32), g0),
+                jnp.arange(grad_accum))
+            l = tot_l / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+
+        params, opt_state, metrics = adamw_update(params, grads, opt_state,
+                                                  opt_cfg)
+        metrics["loss"] = l
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    def prefill_step(params, tokens, img_embeds=None):
+        return lm.prefill(params, tokens, cfg, max_len=max_len,
+                          img_embeds=img_embeds)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, tokens, cache, cur_len):
+        return lm.decode_step(params, tokens, cache, cur_len, cfg)
+    return decode_step

@@ -1,0 +1,234 @@
+"""HLO post-processing: collective-byte accounting + roofline terms.
+
+``compiled.cost_analysis()`` provides per-device FLOPs and HBM bytes;
+collective traffic is NOT included, so we parse the partitioned HLO text
+and sum the bytes of every cross-device collective, with per-op wire
+multipliers (ring algorithms):
+
+    all-reduce        2x result bytes   (reduce-scatter + all-gather)
+    all-gather        1x result bytes   (each chip receives the full result)
+    reduce-scatter    1x operand ~= result * n ... accounted as result * 1
+                      (bytes leaving/entering one chip ~ operand/n * (n-1))
+    all-to-all        1x result bytes
+    collective-permute 1x result bytes
+
+These are per-chip wire-byte approximations, adequate for comparing
+roofline terms across shardings (the quantity we hillclimb).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^=]*?\)?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_kind: dict
+    f32_activation_bytes: float = 0.0  # see tpu_adjusted_wire_bytes
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(_COLLECTIVES[k] * v for k, v in self.bytes_by_kind.items())
+
+    @property
+    def tpu_adjusted_wire_bytes(self) -> float:
+        """XLA:CPU upcasts all bf16 compute to f32 (verified in
+        tests/test_roofline.py), so matmul-partial / activation
+        all-reduces appear at 2x their TPU width.  This adjustment
+        halves the f32 collectives attributed to fwd/bwd dot_generals
+        (gradient accumulators legitimately stay f32 and are not
+        adjusted)."""
+        return self.total_wire_bytes - 0.5 * 2.0 * self.f32_activation_bytes
+
+
+# a computation header is an UNINDENTED "name (signature) -> type {" line;
+# signatures may contain nested tuple parens, so match loosely to the
+# trailing "{" instead of balancing parens
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$", re.M)
+_WHILE_RE = re.compile(
+    r"while\([^)]*\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:calls|to_apply|branch_computations)="
+                      r"[{]?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)[}]?")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _segment_computations(text: str) -> dict:
+    """Split HLO text into {computation_name: body_text}."""
+    comps = {}
+    matches = list(_COMP_RE.finditer(text))
+    for i, m in enumerate(matches):
+        start = m.start()
+        end = matches[i + 1].start() if i + 1 < len(matches) else len(text)
+        comps[m.group(1)] = text[start:end]
+    return comps
+
+
+def _entry_name(text: str) -> str | None:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+    return m.group(1) if m else None
+
+
+def _trip_count(cond_body: str) -> int:
+    """Trip count of a scan-lowered while: the bound constant in the
+    condition computation (max s32 constant; 1 if none found)."""
+    consts = [int(c) for c in _CONST_RE.findall(cond_body)]
+    return max(consts) if consts else 1
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Collective bytes with while-loop trip multipliers.
+
+    XLA prints each while body once; we walk the computation graph from
+    ENTRY, multiplying collective bytes inside loop bodies by the parsed
+    trip counts (verified against scan-lowered HLO in tests).
+    """
+    comps = _segment_computations(hlo_text)
+    entry = _entry_name(hlo_text)
+    counts: dict = {}
+    byts: dict = {}
+    f32_act = [0.0]
+
+    def local_collectives(body: str):
+        out = []
+        for m in _OP_RE.finditer(body):
+            type_str, kind = m.group(1), m.group(2)
+            line = body[m.start():body.find("\n", m.start())]
+            if f"{kind}-done" in line:
+                continue
+            b = _shape_bytes(type_str)
+            if f"{kind}-start" in line:
+                b = b // 2 or b  # start result tuple = (operand, result)
+            is_f32_act = ("f32[" in type_str and kind == "all-reduce"
+                          and ("dot_general" in line or "reshape" in line))
+            out.append((kind, b, is_f32_act))
+        return out
+
+    def visit(name: str, mult: float, depth: int = 0):
+        body = comps.get(name)
+        if body is None or depth > 32:
+            return
+        for kind, b, is_f32_act in local_collectives(body):
+            counts[kind] = counts.get(kind, 0) + mult
+            byts[kind] = byts.get(kind, 0) + mult * b
+            if is_f32_act:
+                f32_act[0] += mult * b
+        for m in _WHILE_RE.finditer(body):
+            cond, wbody = m.group(1), m.group(2)
+            trips = _trip_count(comps.get(cond, ""))
+            visit(wbody, mult * trips, depth + 1)
+        for m in _CALL_RE.finditer(body):
+            for callee in re.split(r",\s*%?", m.group(1)):
+                if callee != name:
+                    visit(callee, mult, depth + 1)
+
+    if entry:
+        visit(entry, 1.0)
+    else:  # fallback: flat, no multipliers
+        for m in _OP_RE.finditer(hlo_text):
+            kind = m.group(2)
+            counts[kind] = counts.get(kind, 0) + 1
+            byts[kind] = byts.get(kind, 0) + _shape_bytes(m.group(1))
+    return CollectiveStats(counts=counts, bytes_by_kind=byts,
+                           f32_activation_bytes=f32_act[0])
+
+
+# ---------------------------------------------------------------------- #
+# roofline
+# ---------------------------------------------------------------------- #
+PEAK_FLOPS = 197e12      # TPU v5e bf16 FLOP/s per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device HLO bytes accessed
+    wire_bytes: float            # per-device collective bytes
+    model_flops: float           # 6 * N_active * tokens (whole step, global)
+    chips: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.wire_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / (HLO flops summed over chips)."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Achievable MFU if the step runs exactly at the dominant bound."""
+        if self.bound_s == 0:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS * self.bound_s)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "wire_bytes_per_chip": self.wire_bytes,
+            "model_flops": self.model_flops,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_flops_frac": self.useful_flops_frac,
+            "mfu_bound": self.mfu_bound,
+        }

@@ -1,0 +1,18 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see the
+real single CPU device; only the dry-run (subprocess) forces 512."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def dial_model():
+    """Production DIAL model if trained, else a quick small one."""
+    from repro.core.model import DIALModel
+    try:
+        return DIALModel.load("models/dial")
+    except FileNotFoundError:
+        from repro.core.dataset import collect, train_models, CollectConfig
+        from repro.core.gbdt import GBDTParams
+        data = collect(CollectConfig(seconds=30.0, reps=1))
+        return train_models(data, GBDTParams(n_trees=40, max_depth=5))

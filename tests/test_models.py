@@ -1,0 +1,112 @@
+"""Per-arch smoke tests (reduced configs): fwd/train step, shapes, no NaNs,
+prefill/decode consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.models import lm
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def _batch(cfg):
+    if cfg.num_codebooks:
+        tokens = jax.random.randint(KEY, (B, S, cfg.num_codebooks), 0,
+                                    cfg.vocab_size)
+    else:
+        tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.img_tokens:
+        batch["img_embeds"] = jax.random.normal(
+            KEY, (B, cfg.img_tokens, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    """One forward/backward on the reduced config: finite loss + grads."""
+    cfg = get_smoke_config(arch)
+    params = lm.init_params(cfg, KEY)
+    batch = _batch(cfg)
+    loss, grads = jax.value_and_grad(
+        lambda p: lm.loss_fn(p, batch, cfg))(params)
+    assert np.isfinite(float(loss)), arch
+    for leaf in jax.tree.leaves(grads):
+        assert np.isfinite(np.asarray(leaf, dtype=np.float32)).all(), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes(arch):
+    cfg = get_smoke_config(arch)
+    params = lm.init_params(cfg, KEY)
+    batch = _batch(cfg)
+    x, aux = lm.forward_train(params, batch["tokens"], cfg,
+                              img_embeds=batch.get("img_embeds"))
+    exp_s = S + (cfg.img_tokens or 0)
+    assert x.shape == (B, exp_s, cfg.d_model), arch
+    logits = lm.logits_for(params, x[:, -1:], cfg)
+    if cfg.num_codebooks:
+        assert logits.shape == (B, 1, cfg.num_codebooks, cfg.vocab_size)
+    else:
+        assert logits.shape == (B, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all(), arch
+
+
+@pytest.mark.parametrize("arch", ["stablelm-12b", "recurrentgemma-9b",
+                                  "falcon-mamba-7b", "gemma2-2b",
+                                  "musicgen-large"])
+def test_prefill_decode_consistency(arch):
+    """Token-by-token decode reproduces the prefill logits."""
+    cfg = get_smoke_config(arch)
+    params = lm.init_params(cfg, KEY)
+    tshape = (B, S, cfg.num_codebooks) if cfg.num_codebooks else (B, S)
+    tokens = jax.random.randint(KEY, tshape, 0, cfg.vocab_size)
+    plog, _ = lm.prefill(params, tokens, cfg, max_len=S + 8)
+    cache = lm.init_cache(cfg, B, max_len=S + 8)
+    for t in range(S):
+        dlog, cache = lm.decode_step(params, tokens[:, t:t + 1], cache,
+                                     jnp.int32(t), cfg)
+    err = float(jnp.abs(plog - dlog).max())
+    assert err < 5e-2, (arch, err)
+
+
+def test_full_configs_construct_abstractly():
+    """Full published configs build abstract params without allocation,
+    and the analytic parameter counts are in the right ballpark."""
+    expected_b = {
+        "gemma2-2b": (2.0, 3.5), "stablelm-12b": (11, 14),
+        "starcoder2-15b": (14, 17), "qwen1.5-32b": (30, 36),
+        "falcon-mamba-7b": (6.5, 8.5), "olmoe-1b-7b": (6, 8),
+        "recurrentgemma-9b": (8, 11), "llava-next-34b": (32, 36),
+        "qwen2-moe-a2.7b": (13, 16), "musicgen-large": (2, 3.5),
+    }
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        ap = lm.abstract_params(cfg)
+        n = sum(np.prod(l.shape) for l in jax.tree.leaves(ap))
+        lo, hi = expected_b[arch]
+        assert lo * 1e9 <= n <= hi * 1e9, (arch, n / 1e9)
+        # analytic count agrees with the real pytree within 2%
+        assert abs(cfg.param_count() - n) / n < 0.02, (
+            arch, cfg.param_count() / 1e9, n / 1e9)
+
+
+def test_gemma2_softcap_and_pattern():
+    cfg = get_config("gemma2-2b")
+    types = cfg.layer_types()
+    assert len(types) == 26
+    assert types[0] == "attn_local" and types[1] == "attn"
+    assert cfg.final_softcap == 30.0 and cfg.attn_softcap == 50.0
+
+
+def test_recurrentgemma_pattern_with_tail():
+    cfg = get_config("recurrentgemma-9b")
+    types = cfg.layer_types()
+    assert len(types) == 38
+    assert types.count("attn_local") == 12
+    assert types.count("recurrent") == 26
+    assert cfg.tail_types == ("recurrent", "recurrent")

@@ -1,0 +1,119 @@
+"""PFS simulator: invariants (hypothesis) + calibration regressions."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.pfs import PFSSim, SimParams
+from repro.pfs.engine import READ, WRITE
+from repro.pfs.workloads import random_stream, sequential_stream
+
+
+def run_stream(op, wl_fn, req, window, inflight, n_threads=1, seconds=6.0,
+               seed=0):
+    sim = PFSSim(n_clients=1, n_osts=4, seed=seed)
+    wl = wl_fn(0, op, req, ost=0, n_threads=n_threads)
+    sim.attach(wl)
+    sim.set_knobs(sim.client_oscs(0), window_pages=window,
+                  rpcs_in_flight=inflight)
+    sim.run(seconds)
+    return wl.done_bytes(sim) / seconds / 1e6, sim
+
+
+# ---------------------------------------------------------------------- #
+# physics invariants
+# ---------------------------------------------------------------------- #
+@settings(max_examples=15, deadline=None)
+@given(window=st.sampled_from([16, 64, 256, 1024]),
+       inflight=st.sampled_from([1, 2, 4, 8, 16, 32]),
+       req=st.sampled_from([8 * 1024, 1 * 2**20, 16 * 2**20]),
+       rand=st.booleans(), op=st.sampled_from([READ, WRITE]))
+def test_throughput_never_exceeds_physics(window, inflight, req, rand, op):
+    """Delivered bytes can never exceed OST bandwidth (+ write-cache slack)."""
+    fn = random_stream if rand else sequential_stream
+    tput, sim = run_stream(op, fn, req, window, inflight, n_threads=4)
+    cap = sim.params.ost_bandwidth / 1e6
+    slack = (sim.params.max_dirty_bytes + sim.params.grant_bytes) / 6.0 / 1e6 \
+        if op == WRITE else 1.0
+    assert tput <= cap + slack + 1.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(window=st.sampled_from([16, 64, 256, 1024]),
+       inflight=st.sampled_from([1, 4, 16]))
+def test_counters_monotonic_nonnegative(window, inflight):
+    sim = PFSSim(n_clients=2, n_osts=4, seed=1)
+    sim.attach(sequential_stream(0, READ, 2**20, ost=0))
+    sim.attach(random_stream(1, WRITE, 8192, ost=0, n_threads=4))
+    sim.set_knobs(sim.client_oscs(0), window_pages=window,
+                  rpcs_in_flight=inflight)
+    prev = None
+    for _ in range(10):
+        sim.run(0.25)
+        cur = (sim.ctr_bytes_done.copy(), sim.ctr_rpcs_sent.copy(),
+               sim.ctr_latency_sum.copy())
+        for arr in cur:
+            assert (arr >= -1e-9).all()
+        if prev is not None:
+            for a, b in zip(prev, cur):
+                assert (b - a >= -1e-6).all(), "counters must be monotonic"
+        prev = cur
+    # fluid state sanity
+    assert (sim.dirty_bytes >= -1e-6).all()
+    assert (sim.active_rpcs >= -1e-6).all()
+
+
+def test_determinism():
+    t1, _ = run_stream(READ, sequential_stream, 2**20, 256, 8, seed=5)
+    t2, _ = run_stream(READ, sequential_stream, 2**20, 256, 8, seed=5)
+    assert t1 == t2
+
+
+# ---------------------------------------------------------------------- #
+# calibration regressions (the regimes DIAL exploits)
+# ---------------------------------------------------------------------- #
+def test_seq_big_window_wins():
+    lo, _ = run_stream(READ, sequential_stream, 16 * 2**20, 16, 4)
+    hi, _ = run_stream(READ, sequential_stream, 16 * 2**20, 1024, 4)
+    assert hi > 2 * lo
+
+
+def test_random_small_oversized_window_hurts():
+    """The paper's SII-B motivation: huge windows idle the RPC channels
+    under sparse random demand."""
+    good, _ = run_stream(READ, random_stream, 8192, 64, 8, n_threads=32)
+    bad, _ = run_stream(READ, random_stream, 8192, 1024, 8, n_threads=32)
+    assert good > 2 * bad
+
+
+def test_inflight_scales_seq_reads():
+    lo, _ = run_stream(READ, sequential_stream, 2**20, 256, 1)
+    hi, _ = run_stream(READ, sequential_stream, 2**20, 256, 8)
+    assert hi > 1.5 * lo
+
+
+def test_contention_shares_bandwidth():
+    sim = PFSSim(n_clients=4, n_osts=4, seed=0)
+    wls = []
+    for c in range(4):
+        w = sequential_stream(c, READ, 2**20, ost=0)
+        sim.attach(w)
+        wls.append(w)
+    sim.run(6.0)
+    rates = [w.done_bytes(sim) / 6.0 for w in wls]
+    cap = sim.params.ost_bandwidth
+    assert sum(rates) <= cap * 1.05
+    assert max(rates) / max(min(rates), 1.0) < 1.5  # fair-ish
+
+
+def test_write_cache_absorbs_then_throttles():
+    sim = PFSSim(n_clients=1, n_osts=4, seed=0)
+    w = sequential_stream(0, WRITE, 2**20, ost=0)
+    sim.attach(w)
+    sim.set_knobs(sim.client_oscs(0), window_pages=256, rpcs_in_flight=8)
+    sim.run(0.5)
+    early = w.done_bytes(sim) / 0.5
+    sim.run(10.0)
+    late = (w.done_bytes(sim) - early * 0.5) / 10.0
+    assert early > late  # initial burst into the dirty cache
+    assert late <= sim.params.ost_bandwidth * 1.05
