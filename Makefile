@@ -1,0 +1,13 @@
+PY ?= python
+
+.PHONY: verify deps bench-fleet
+
+deps:
+	$(PY) -m pip install -r requirements-dev.txt
+
+# tier-1 verify (same command CI runs)
+verify:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+bench-fleet:
+	PYTHONPATH=src $(PY) benchmarks/fleet_scaling.py --quick

@@ -10,6 +10,7 @@ import time
 
 def main() -> None:
     import benchmarks.fig3_dlio as fig3
+    import benchmarks.fleet_scaling as fleet
     import benchmarks.table2_h5bench as t2
     import benchmarks.table3_overhead as t3
 
@@ -33,6 +34,15 @@ def main() -> None:
     print(f"table3_overhead,{el:.0f},"
           f"read_e2e_ms={res['read']['end_to_end_ms']:.2f};"
           f"write_e2e_ms={res['write']['end_to_end_ms']:.2f}")
+
+    t0 = time.time()
+    fm = fleet.get_model("numpy")
+    rf = fleet.bench(128, 2, fm)
+    el = (time.time() - t0) * 1e6
+    print(f"fleet_scaling,{el:.0f},"
+          f"fleet_ms_per_osc={rf['fleet_ms']:.3f};"
+          f"loop_ms_per_osc={rf['loop_ms']:.3f};"
+          f"speedup={rf['speedup']:.1f}x")
 
     print("\n--- Table II detail ---")
     for r in rows2:

@@ -4,6 +4,12 @@ Wall-clock times for snapshot creation, model inference over the whole
 configuration space, and the end-to-end tuning round — per operation type,
 for the numpy reference backend, the jitted JAX path, and the Pallas
 kernel (interpret mode on CPU; compiled on TPU).
+
+Since the fleet refactor, :class:`DIALAgent` scores all of its client's
+interfaces per tick in one batch, so the reported figures are the batch
+cost amortized per interface — the honest per-interface price an
+operator pays.  ``benchmarks/fleet_scaling.py`` sweeps the same figure
+against the historical per-interface loop at fleet scale.
 """
 
 from __future__ import annotations

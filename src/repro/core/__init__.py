@@ -6,18 +6,36 @@ space with GBDT models, and apply the Conditional-Score-Greedy winner
 to each OSC interface, every interval, with no global coordination.
 """
 
-from repro.core.agent import DIALAgent, SimClientPort, run_with_agents
+from repro.core.agent import (DIALAgent, ReferenceLoopAgent, SimClientPort,
+                              run_with_agents, run_with_loop_agents)
 from repro.core.config_space import DEFAULT, SPACE, ConfigSpace
 from repro.core.dataset import CollectConfig, collect, train_models
+from repro.core.fleet import (FleetAgent, LoopFleetPort, SimFleetPort,
+                              as_fleet_port, run_fleet)
 from repro.core.gbdt import DenseForest, GBDTClassifier, GBDTParams
-from repro.core.metrics import Snapshot, feature_vector, snapshot
+from repro.core.metrics import (FleetSnapshot, Snapshot, feature_vector,
+                                fleet_feature_matrix, snapshot, snapshot_all)
 from repro.core.model import DIALModel
-from repro.core.tuner import TuneDecision, TunerParams, conditional_score_greedy
+from repro.core.tuner import (FleetDecisions, TuneDecision, TunerParams,
+                              conditional_score_greedy,
+                              conditional_score_greedy_batch)
 
 __all__ = [
     "DIALAgent",
+    "ReferenceLoopAgent",
     "SimClientPort",
     "run_with_agents",
+    "run_with_loop_agents",
+    "FleetAgent",
+    "SimFleetPort",
+    "LoopFleetPort",
+    "as_fleet_port",
+    "run_fleet",
+    "FleetSnapshot",
+    "snapshot_all",
+    "fleet_feature_matrix",
+    "FleetDecisions",
+    "conditional_score_greedy_batch",
     "DEFAULT",
     "SPACE",
     "ConfigSpace",

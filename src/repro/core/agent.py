@@ -13,6 +13,16 @@ protocol so the same code drives (a) the PFS simulator directly and
 (b) the training-framework data pipeline / checkpoint writer
 (:mod:`repro.data.pipeline`), which is how the paper's technique embeds
 into the training system as a first-class feature.
+
+Execution is delegated to the batched fleet path
+(:mod:`repro.core.fleet`): a :class:`DIALAgent` is a thin adapter that
+lifts its port to the fleet surface and runs a one-client
+:class:`~repro.core.fleet.FleetAgent`, so even a single client scores all
+of its interfaces in one model launch per tick instead of one per
+interface.  The original per-interface Python loop is preserved verbatim
+as :class:`ReferenceLoopAgent` — the oracle the fleet/loop equivalence
+tests compare against, and the baseline `benchmarks/fleet_scaling.py`
+amortizes away.
 """
 
 from __future__ import annotations
@@ -60,7 +70,12 @@ class SimClientPort:
 
 @dataclasses.dataclass
 class AgentTimings:
-    """Wall-clock overheads per operation (reproduces paper Table III)."""
+    """Wall-clock overheads per operation (reproduces paper Table III).
+
+    Loop agents append each interface's own latency; fleet agents append
+    batch cost amortized per covered interface — the honest per-interface
+    figure either way.
+    """
 
     snapshot_ms: list = dataclasses.field(default_factory=list)
     inference_ms: list = dataclasses.field(default_factory=list)
@@ -74,7 +89,88 @@ class AgentTimings:
 
 
 class DIALAgent:
-    """Decentralized tuner for one client; call :meth:`tick` every interval."""
+    """Decentralized tuner for one client; call :meth:`tick` every interval.
+
+    Thin adapter over the batched fleet path: decisions, knob updates and
+    memory behaviour are identical to the historical per-interface loop
+    (see :class:`ReferenceLoopAgent`), but every tick runs the metrics,
+    inference and Algorithm 1 stages once for all of the client's
+    interfaces together.
+    """
+
+    def __init__(
+        self,
+        port: ClientPort,
+        model: DIALModel,
+        space: ConfigSpace = SPACE,
+        tuner_params: TunerParams = TunerParams(),
+        k: int = 1,
+        min_volume_bytes: float = 256 * 1024,
+        warmup_intervals: int = 2,
+        measure_overhead: bool = False,
+    ):
+        from repro.core.fleet import FleetAgent, as_fleet_port
+
+        self.port = port
+        self.model = model
+        self.space = space
+        self.tuner_params = tuner_params
+        self.k = k
+        self.min_volume = min_volume_bytes
+        self.warmup = warmup_intervals
+        self.measure_overhead = measure_overhead
+        self._fleet = FleetAgent(
+            as_fleet_port(port), model, space=space,
+            tuner_params=tuner_params, k=k,
+            min_volume_bytes=min_volume_bytes,
+            warmup_intervals=warmup_intervals,
+            measure_overhead=measure_overhead)
+        self.decisions: list = []
+
+    # ------------------------------------------------------------------ #
+    def tick(self) -> list:
+        """One tuning round across all of this client's OSC interfaces.
+
+        Returns the historical ``[(osc, op, TuneDecision), ...]`` shape.
+        """
+        decisions = self._fleet.tick().as_list()
+        self.decisions.extend(decisions)
+        return decisions
+
+    # --- compat surface over the fleet state --------------------------- #
+    @property
+    def timings(self) -> dict:
+        return self._fleet.timings
+
+    @property
+    def _ticks(self) -> int:
+        return self._fleet._ticks
+
+    @property
+    def _current(self) -> dict:
+        cur = self._fleet._current
+        return {int(o): (int(cur[i, 0]), int(cur[i, 1]))
+                for i, o in enumerate(self._fleet.oscs)}
+
+    @property
+    def _hist(self) -> dict:
+        """Per-interface snapshot views (paper SIV-C: at most k+1 kept)."""
+        fleet_hist = list(self._fleet._hist)
+        return {int(o): tuple(s.one(i) for s in fleet_hist)
+                for i, o in enumerate(self._fleet.oscs)}
+
+
+class ReferenceLoopAgent:
+    """The original per-interface tuning loop, kept verbatim as an oracle.
+
+    One Python iteration — probe, snapshot, model launch, Algorithm 1,
+    knob write — per OSC interface per tick.  This is the paper's
+    measured client implementation (Table III per-interface overheads)
+    and the semantic reference the batched :class:`FleetAgent` must match
+    decision-for-decision (see ``tests/test_fleet.py``); it is also the
+    baseline that `benchmarks/fleet_scaling.py` compares against.  Use
+    :class:`DIALAgent` everywhere else.
+    """
 
     def __init__(
         self,
@@ -161,11 +257,36 @@ class DIALAgent:
 def run_with_agents(sim, model: DIALModel, clients: list[int],
                     seconds: float, interval: float = 0.5,
                     measure_overhead: bool = False,
-                    tuner_params: TunerParams = TunerParams()) -> list[DIALAgent]:
-    """Drive the simulator with one autonomous agent per client."""
-    agents = [DIALAgent(SimClientPort(sim, c), model,
-                        tuner_params=tuner_params,
-                        measure_overhead=measure_overhead) for c in clients]
+                    tuner_params: TunerParams = TunerParams()):
+    """Drive the simulator with autonomous DIAL tuning on ``clients``.
+
+    Delegates to the fleet path: all listed clients' interfaces tick as
+    one batch — one probe, one model launch, one Algorithm 1 pass per
+    interval for the whole fleet (decisions remain per-interface and
+    client-local, exactly as with one agent object per client).  Returns
+    the :class:`~repro.core.fleet.FleetAgent`.
+    """
+    from repro.core.fleet import run_fleet
+
+    oscs = np.concatenate([sim.client_oscs(c) for c in clients])
+    return run_fleet(sim, model, oscs=oscs, seconds=seconds,
+                     interval=interval, measure_overhead=measure_overhead,
+                     tuner_params=tuner_params)
+
+
+def run_with_loop_agents(sim, model: DIALModel, clients: list[int],
+                         seconds: float, interval: float = 0.5,
+                         measure_overhead: bool = False,
+                         tuner_params: TunerParams = TunerParams()) -> list:
+    """Reference driver: one :class:`ReferenceLoopAgent` per client.
+
+    Kept for the fleet/loop equivalence tests and scaling benchmarks;
+    production callers want :func:`run_with_agents`.
+    """
+    agents = [ReferenceLoopAgent(SimClientPort(sim, c), model,
+                                 tuner_params=tuner_params,
+                                 measure_overhead=measure_overhead)
+              for c in clients]
     steps_per_interval = max(int(round(interval / sim.params.tick)), 1)
     n_intervals = int(round(seconds / interval))
     for _ in range(n_intervals):

@@ -1,0 +1,286 @@
+"""Fleet-scale DIAL: every interface's tuning tick in one batched pass.
+
+The per-client :class:`~repro.core.agent.DIALAgent` walks its OSC
+interfaces one at a time in Python and re-enters the model once per
+interface — exactly the per-interface 10-13.5 ms hot spot the paper's
+Table III measures.  The decentralization thesis only pays off at scale
+(many clients tuning every interval), so the hot path must not scale
+with Python-level agent count.
+
+:class:`FleetAgent` runs the identical DIAL algorithm for the whole
+fleet with array programs end to end:
+
+    probe      one fancy-indexed copy of the simulator's flat counters
+               (:func:`repro.pfs.stats.probe_all`) instead of a probe
+               call per interface;
+    metrics    one :func:`repro.core.metrics.snapshot_all` differencing
+               into an ``(n_osc, F)`` matrix;
+    inference  all decidable (interface x config) rows for *both* ops
+               fused into a single batched forest launch
+               (:meth:`DIALModel.score_fleet` — on the jax/pallas
+               backends literally one kernel launch with a per-row
+               forest selector);
+    tuning     :func:`conditional_score_greedy_batch`, Algorithm 1 as
+               masked reductions;
+    actuation  one fancy-indexed :meth:`set_knobs` for every changed
+               interface.
+
+Decisions are bit-for-bit identical to the per-interface loop (kept as
+:class:`~repro.core.agent.ReferenceLoopAgent`, the oracle for the
+fleet/loop equivalence tests) — only the schedule changes.
+
+Decentralization is preserved: each row of every matrix is built purely
+from that interface's client-local counters, and no decision reads
+another interface's state.  Batching is an *execution* strategy on a
+host that happens to run many clients (or a simulator that models them);
+the algorithm remains per-client autonomous.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Protocol
+
+import numpy as np
+
+from repro.core.config_space import SPACE, ConfigSpace
+from repro.core.metrics import fleet_feature_matrix, snapshot_all
+from repro.core.model import DIALModel
+from repro.core.tuner import (FleetDecisions, TunerParams,
+                              conditional_score_greedy_batch)
+from repro.pfs.engine import READ, WRITE
+from repro.pfs.stats import FleetStats, probe_all, stack_stats
+
+
+class FleetPort(Protocol):
+    """What a fleet agent needs from the system it tunes — the batched
+    counterpart of :class:`~repro.core.agent.ClientPort`."""
+
+    def osc_ids(self) -> np.ndarray: ...
+    def probe_all(self) -> FleetStats: ...
+    def set_knobs_many(self, osc_ids, window_pages, rpcs_in_flight) -> None: ...
+
+
+@dataclasses.dataclass
+class SimFleetPort:
+    """Adapter: a set of the PFS simulator's OSC interfaces (default all).
+
+    Probing reads the simulator's flat counter arrays directly, so one
+    fleet probe costs the same handful of array copies whether it covers
+    4 interfaces or 4096.
+    """
+
+    sim: object
+    oscs: np.ndarray | None = None
+
+    def osc_ids(self) -> np.ndarray:
+        if self.oscs is None:
+            return np.arange(self.sim.n_osc)
+        return np.asarray(self.oscs, dtype=np.int64)
+
+    def probe_all(self) -> FleetStats:
+        return probe_all(self.sim, self.osc_ids())
+
+    def set_knobs_many(self, osc_ids, window_pages, rpcs_in_flight) -> None:
+        self.sim.set_knobs(osc_ids, window_pages=window_pages,
+                           rpcs_in_flight=rpcs_in_flight)
+
+
+@dataclasses.dataclass
+class LoopFleetPort:
+    """Adapter lifting any per-interface :class:`ClientPort` to the fleet
+    surface.  Probing loops in Python (the port gives us no better), but
+    everything downstream — metrics, inference, Algorithm 1 — still runs
+    batched, which is where the per-interface milliseconds live."""
+
+    port: object  # ClientPort
+
+    def osc_ids(self) -> np.ndarray:
+        return np.asarray(self.port.osc_ids(), dtype=np.int64)
+
+    def probe_all(self) -> FleetStats:
+        ids = self.osc_ids()
+        return stack_stats([self.port.probe(int(o)) for o in ids], ids)
+
+    def set_knobs_many(self, osc_ids, window_pages, rpcs_in_flight) -> None:
+        ids = np.atleast_1d(np.asarray(osc_ids))
+        ws = np.broadcast_to(np.asarray(window_pages), ids.shape)
+        rs = np.broadcast_to(np.asarray(rpcs_in_flight), ids.shape)
+        for o, w, r in zip(ids, ws, rs):
+            self.port.set_knobs(int(o), int(w), int(r))
+
+
+def as_fleet_port(port) -> "FleetPort":
+    """Lift a port to the fleet surface (no-op if it already is one)."""
+    if hasattr(port, "probe_all"):
+        return port
+    if hasattr(port, "sim") and hasattr(port, "client"):
+        # SimClientPort: take the direct array path for its client's OSCs
+        return SimFleetPort(port.sim,
+                            np.asarray(port.osc_ids(), dtype=np.int64))
+    return LoopFleetPort(port)
+
+
+@dataclasses.dataclass
+class FleetTickResult:
+    """Everything one fleet tick decided, row-aligned over decided rows."""
+
+    oscs: np.ndarray          # (m,) interface ids that reached Algorithm 1
+    ops: np.ndarray           # (m,) op model used per interface
+    decisions: FleetDecisions # batched Algorithm 1 outcomes
+
+    def __len__(self) -> int:
+        return len(self.oscs)
+
+    def as_list(self) -> list:
+        """Per-agent compat: ``[(osc, op, TuneDecision), ...]``."""
+        return [(int(self.oscs[i]), int(self.ops[i]), self.decisions.one(i))
+                for i in range(len(self.oscs))]
+
+
+_EMPTY = FleetTickResult(
+    oscs=np.zeros(0, dtype=np.int64), ops=np.zeros(0, dtype=np.int64),
+    decisions=FleetDecisions(theta=np.zeros((0, 2), dtype=np.int64),
+                             changed=np.zeros(0, dtype=bool),
+                             n_candidates=np.zeros(0, dtype=np.int64),
+                             score=np.zeros(0),
+                             probs=np.zeros((0, len(SPACE)))))
+
+
+class FleetAgent:
+    """DIAL for a whole fleet of interfaces; call :meth:`tick` every
+    interval.  Constructor arguments mirror :class:`DIALAgent`; the
+    semantics per interface are identical."""
+
+    def __init__(
+        self,
+        port: FleetPort,
+        model: DIALModel,
+        space: ConfigSpace = SPACE,
+        tuner_params: TunerParams = TunerParams(),
+        k: int = 1,
+        min_volume_bytes: float = 256 * 1024,
+        warmup_intervals: int = 2,
+        measure_overhead: bool = False,
+    ):
+        from repro.core.agent import AgentTimings  # avoid import cycle
+
+        self.port = port
+        self.model = model
+        self.space = space
+        self.tuner_params = tuner_params
+        self.k = k
+        self.min_volume = min_volume_bytes
+        self.warmup = warmup_intervals
+        self._ticks = 0
+        self.measure_overhead = measure_overhead
+        self.timings = {READ: AgentTimings(), WRITE: AgentTimings()}
+        self.oscs = np.asarray(port.osc_ids(), dtype=np.int64)
+        self.n = len(self.oscs)
+        self._theta_feats = space.as_features()
+        st = port.probe_all()
+        self._prev = st
+        # DIAL keeps only two snapshots per interface in memory (SIV-C);
+        # the fleet holds them as two stacked matrices, not 2 x n objects
+        self._hist: collections.deque = collections.deque(maxlen=k + 1)
+        self._current = np.stack(
+            [st.window_pages, st.rpcs_in_flight], axis=1).astype(np.int64)
+        self.decisions: list = []
+
+    # ------------------------------------------------------------------ #
+    def tick(self) -> FleetTickResult:
+        """One tuning round across every interface — one batch per stage."""
+        self._ticks += 1
+        t0 = time.perf_counter()
+        cur = self.port.probe_all()
+        snap = snapshot_all(self._prev, cur)
+        self._prev = cur
+        self._hist.append(snap)
+        t1 = time.perf_counter()
+        if len(self._hist) < self.k + 1 or self._ticks <= self.warmup + self.k:
+            return _EMPTY
+
+        # per-interface gating, all as masks (same predicates as the loop)
+        vol_r, vol_w = snap.read_volume, snap.write_volume
+        ops = np.where(vol_r >= vol_w, READ, WRITE)       # op model (SIII-C)
+        active = np.maximum(vol_r, vol_w) >= self.min_volume
+        oldest = self._hist[0]
+        v0 = np.where(ops == READ, oldest.read_volume, oldest.write_volume)
+        v1 = np.where(ops == READ, vol_r, vol_w)
+        ratio = v1 / np.maximum(v0, 1.0)
+        steady = (ratio >= 0.5) & (ratio <= 2.0)          # burst guard
+        rows = np.nonzero(active & steady)[0]
+        if rows.size == 0:
+            return _EMPTY
+
+        # one feature matrix per op group, one fused model launch
+        history = list(self._hist)
+        read_rows = rows[ops[rows] == READ]
+        write_rows = rows[ops[rows] == WRITE]
+        X_read = fleet_feature_matrix(history, READ, read_rows,
+                                      self._theta_feats)
+        X_write = fleet_feature_matrix(history, WRITE, write_rows,
+                                       self._theta_feats)
+        p_read, p_write = self.model.score_fleet(X_read, X_write)
+        m = len(self.space)
+        probs = np.empty((rows.size, m))
+        is_read = ops[rows] == READ
+        probs[is_read] = p_read.reshape(read_rows.size, m)
+        probs[~is_read] = p_write.reshape(write_rows.size, m)
+        t2 = time.perf_counter()
+
+        # batched Algorithm 1, then one fancy-indexed knob application
+        dec = conditional_score_greedy_batch(
+            probs, ops[rows], self._current[rows], self.space,
+            self.tuner_params)
+        ch = dec.changed
+        if ch.any():
+            self.port.set_knobs_many(self.oscs[rows[ch]],
+                                     dec.theta[ch, 0], dec.theta[ch, 1])
+            self._current[rows[ch]] = dec.theta[ch]
+        t3 = time.perf_counter()
+
+        result = FleetTickResult(oscs=self.oscs[rows], ops=ops[rows],
+                                 decisions=dec)
+        if self.measure_overhead:
+            self._record_timings(rows, is_read, t0, t1, t2, t3)
+        self.decisions.append(result)
+        return result
+
+    # ------------------------------------------------------------------ #
+    def _record_timings(self, rows, is_read, t0, t1, t2, t3) -> None:
+        """Amortized per-interface wall-clock (fleet Table III semantics).
+
+        The loop agent attributes each interface its own full probe /
+        inference / apply latency; the fleet pays those costs once for
+        the whole batch, so the honest per-interface figure is the batch
+        cost divided by the interfaces it covered.
+        """
+        snap_ms = (t1 - t0) / max(self.n, 1) * 1e3
+        inf_ms = (t2 - t1) / max(rows.size, 1) * 1e3
+        e2e_ms = (t3 - t0) / max(rows.size, 1) * 1e3
+        for op, mask in ((READ, is_read), (WRITE, ~is_read)):
+            if mask.any():
+                tm = self.timings[op]
+                tm.snapshot_ms.append(snap_ms)
+                tm.inference_ms.append(inf_ms)
+                tm.end_to_end_ms.append(e2e_ms)
+
+
+def run_fleet(sim, model: DIALModel, oscs=None, seconds: float = 10.0,
+              interval: float = 0.5, measure_overhead: bool = False,
+              tuner_params: TunerParams = TunerParams()) -> FleetAgent:
+    """Drive the simulator with one fleet agent over ``oscs`` (default
+    all interfaces) — the batched counterpart of ``run_with_agents``."""
+    fleet = FleetAgent(SimFleetPort(sim, oscs), model,
+                       tuner_params=tuner_params,
+                       measure_overhead=measure_overhead)
+    steps_per_interval = max(int(round(interval / sim.params.tick)), 1)
+    n_intervals = int(round(seconds / interval))
+    for _ in range(n_intervals):
+        for _ in range(steps_per_interval):
+            sim.step()
+        fleet.tick()
+    return fleet

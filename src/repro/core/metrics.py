@@ -18,7 +18,7 @@ import dataclasses
 import numpy as np
 
 from repro.pfs.engine import PAGE_SIZE, READ, WRITE
-from repro.pfs.stats import OSCStats
+from repro.pfs.stats import FleetStats, OSCStats
 
 # Ordered feature names for each op's snapshot vector.  Keep stable: the
 # GBDT models and the Pallas inference kernel index by position.
@@ -160,3 +160,123 @@ def feature_vector(history: list[Snapshot], op: int,
 def feature_dim(op: int, k: int = 1) -> int:
     base = N_READ if op == READ else N_WRITE
     return base * (k + 1) + 4
+
+
+# ---------------------------------------------------------------------- #
+# fleet snapshots: the same designed metrics for every interface at once
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass
+class FleetSnapshot:
+    """One interval's designed metrics for *all* probed interfaces.
+
+    Row ``i`` of ``read`` / ``write`` is exactly the vector
+    :func:`snapshot` would produce for interface ``oscs[i]`` — the fleet
+    path differences the whole stacked probe in a few array ops instead
+    of one Python loop iteration per interface.
+    """
+
+    t: float
+    dt: float
+    oscs: np.ndarray          # (n,)
+    read: np.ndarray          # (n, N_READ)
+    write: np.ndarray         # (n, N_WRITE)
+    read_volume: np.ndarray   # (n,) bytes moved (model-selection signal)
+    write_volume: np.ndarray
+
+    def one(self, i: int) -> Snapshot:
+        """Row ``i`` as a scalar :class:`Snapshot` (compat / debugging)."""
+        return Snapshot(t=self.t, dt=self.dt,
+                        read=self.read[i], write=self.write[i],
+                        read_volume=float(self.read_volume[i]),
+                        write_volume=float(self.write_volume[i]))
+
+
+def _safe_div_arr(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`_safe_div`: elementwise ``a/b`` where ``b > 0``."""
+    a = np.asarray(a, dtype=np.float64)
+    return np.divide(a, b, out=np.zeros_like(a), where=np.asarray(b) > 0)
+
+
+def snapshot_all(prev: FleetStats, cur: FleetStats) -> FleetSnapshot:
+    """Vectorized :func:`snapshot` over two consecutive fleet probes.
+
+    Arithmetic is elementwise-identical to the scalar path (same ops in
+    the same order on float64), so fleet rows match per-interface
+    snapshots bit for bit — the fleet/loop equivalence tests rely on it.
+    """
+    dt = max(cur.t - prev.t, 1e-9)
+
+    def common(op: int) -> list[np.ndarray]:
+        d_bytes = (cur.bytes_done[op] - prev.bytes_done[op]).astype(np.float64)
+        d_rpcs = (cur.rpcs_sent[op] - prev.rpcs_sent[op]).astype(np.float64)
+        d_rpc_bytes = (cur.rpc_bytes[op] - prev.rpc_bytes[op]).astype(np.float64)
+        d_partial = (cur.partial_rpcs[op] - prev.partial_rpcs[op]).astype(np.float64)
+        d_done = (cur.rpcs_done[op] - prev.rpcs_done[op]).astype(np.float64)
+        d_lat = (cur.latency_sum[op] - prev.latency_sum[op]).astype(np.float64)
+        d_reqs = (cur.req_count[op] - prev.req_count[op]).astype(np.float64)
+        d_req_bytes = (cur.req_bytes[op] - prev.req_bytes[op]).astype(np.float64)
+        d_pend = (cur.pending_integral[op] - prev.pending_integral[op]).astype(np.float64)
+        d_act = (cur.active_integral[op] - prev.active_integral[op]).astype(np.float64)
+        return [
+            d_bytes / dt / 1e6,
+            d_rpcs / dt,
+            _safe_div_arr(d_rpc_bytes, d_rpcs) / PAGE_SIZE,
+            _safe_div_arr(d_partial, d_rpcs),
+            _safe_div_arr(d_lat, d_done) * 1e3,
+            d_pend / dt / 2**20,
+            d_act / dt,
+            _safe_div_arr(d_act / dt, cur.rpcs_in_flight),
+            d_reqs / dt,
+            _safe_div_arr(d_req_bytes, d_reqs) / 1024.0,
+            cur.randomness[op].astype(np.float64),
+        ]
+
+    knobs = [np.log2(cur.window_pages), np.log2(cur.rpcs_in_flight)]
+
+    r = common(READ)
+    d_req_bytes_r = (cur.req_bytes[READ] - prev.req_bytes[READ]).astype(np.float64)
+    d_hit = (cur.cache_hit_bytes - prev.cache_hit_bytes).astype(np.float64)
+    r.append(_safe_div_arr(d_hit, d_req_bytes_r))
+    read_mat = np.stack(r + knobs, axis=1)
+
+    w = common(WRITE)
+    w.append((cur.block_time - prev.block_time).astype(np.float64) / dt)
+    w.append((cur.dirty_integral - prev.dirty_integral).astype(np.float64) / dt / 2**20)
+    w.append((cur.grant_integral - prev.grant_integral).astype(np.float64) / dt / 2**20)
+    write_mat = np.stack(w + knobs, axis=1)
+
+    return FleetSnapshot(
+        t=cur.t,
+        dt=dt,
+        oscs=cur.oscs,
+        read=read_mat,
+        write=write_mat,
+        read_volume=(cur.bytes_done[READ] - prev.bytes_done[READ]).astype(np.float64),
+        write_volume=(cur.bytes_done[WRITE] - prev.bytes_done[WRITE]).astype(np.float64),
+    )
+
+
+def fleet_feature_matrix(history: list[FleetSnapshot], op: int,
+                         rows: np.ndarray,
+                         theta_feats: np.ndarray) -> np.ndarray:
+    """Model inputs for selected interfaces against every candidate theta.
+
+    ``history`` is ``[s_{t-k}, ..., s_t]`` of fleet snapshots, ``rows``
+    indexes the interfaces to score, ``theta_feats`` is the ``(M, 2)``
+    log2 grid from :meth:`ConfigSpace.as_features`.  Returns a
+    ``(len(rows) * M, dim)`` float32 matrix: interface-major, so row
+    ``i * M + j`` is (theta_j, H_t of interface rows[i]) — identical
+    row-for-row to stacking :meth:`DIALModel.features_for_space` outputs.
+    """
+    rows = np.asarray(rows)
+    mats = [(h.read if op == READ else h.write)[rows] for h in history]
+    hist = np.concatenate(mats, axis=1)            # (r, N*(k+1)) float64
+    knobs = READ_KNOB_IDX if op == READ else WRITE_KNOB_IDX
+    cur = mats[-1][:, list(knobs)]                 # (r, 2) currently applied
+    r, m = hist.shape[0], theta_feats.shape[0]
+    theta_tiled = np.tile(theta_feats, (r, 1))     # (r*M, 2) float64
+    out = np.empty((r * m, hist.shape[1] + 4), dtype=np.float32)
+    out[:, :-4] = np.repeat(hist, m, axis=0)
+    out[:, -4:-2] = theta_tiled
+    out[:, -2:] = theta_tiled - np.repeat(cur, m, axis=0)
+    return out

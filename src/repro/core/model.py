@@ -69,6 +69,31 @@ class DIALModel:
         p = self.predict_proba(op, X)
         return p.reshape(len(histories), len(self.space))
 
+    def score_fleet(self, X_read: np.ndarray,
+                    X_write: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Probabilities for mixed read/write row batches — the fleet path.
+
+        ``X_read`` / ``X_write`` are the stacked (interface x config)
+        feature rows from :func:`repro.core.metrics.fleet_feature_matrix`.
+        On the jax/pallas backends both ops are fused into **one** launch
+        with a per-row forest selector (the two forests live stacked on
+        device); the numpy backend scores each forest once — still one
+        batched traversal per op, never one call per interface.
+        """
+        if self.backend == "numpy":
+            p_read = (self.read_forest.predict_proba(X_read)
+                      if len(X_read) else np.zeros(0))
+            p_write = (self.write_forest.predict_proba(X_write)
+                       if len(X_write) else np.zeros(0))
+            return p_read, p_write
+        from repro.kernels.gbdt_forest import ops as kops  # lazy import
+        key = ("fleet", self.backend)
+        if key not in self._jax_fns:
+            self._jax_fns[key] = kops.make_fleet_predictor(
+                self.read_forest, self.write_forest,
+                use_pallas=(self.backend == "pallas"))
+        return self._jax_fns[key](X_read, X_write)
+
     # ------------------------------------------------------------------ #
     def predict_proba(self, op: int, X: np.ndarray) -> np.ndarray:
         f = self.forest(op)

@@ -73,3 +73,75 @@ def conditional_score_greedy(
     return TuneDecision(theta=theta, changed=theta != tuple(current),
                         n_candidates=int(keep.sum()), probs=probs,
                         score=float(scores[j]))
+
+
+# ---------------------------------------------------------------------- #
+# batched Algorithm 1: every interface's decision in one pass
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass
+class FleetDecisions:
+    """Algorithm 1 outcomes for a batch of interfaces (row-aligned)."""
+
+    theta: np.ndarray         # (m, 2) chosen configuration per row
+    changed: np.ndarray       # (m,) bool
+    n_candidates: np.ndarray  # (m,) how many configs cleared tau
+    score: np.ndarray         # (m,) winning score (0 when nothing cleared)
+    probs: np.ndarray         # (m, |Theta|) f(theta, H_t) per row
+
+    def __len__(self) -> int:
+        return self.theta.shape[0]
+
+    def one(self, i: int) -> TuneDecision:
+        """Row ``i`` as a scalar :class:`TuneDecision` (compat surface)."""
+        return TuneDecision(
+            theta=(int(self.theta[i, 0]), int(self.theta[i, 1])),
+            changed=bool(self.changed[i]),
+            n_candidates=int(self.n_candidates[i]),
+            probs=self.probs[i],
+            score=float(self.score[i]))
+
+
+def conditional_score_greedy_batch(
+    probs: np.ndarray,
+    ops: np.ndarray,
+    current: np.ndarray,
+    space: ConfigSpace = SPACE,
+    params: TunerParams = TunerParams(),
+) -> FleetDecisions:
+    """Vectorized Algorithm 1 over ``m`` interfaces at once.
+
+    ``probs`` is ``(m, |Theta|)`` in ``space.configs()`` order, ``ops`` is
+    ``(m,)`` op codes and ``current`` the ``(m, 2)`` currently-applied
+    thetas.  Row ``i`` equals
+    ``conditional_score_greedy(probs[i], ops[i], current[i])`` exactly —
+    same MinMax-over-survivors normalization, same first-max tie break —
+    just computed with masked reductions instead of a Python loop.
+    """
+    probs = np.asarray(probs, dtype=np.float64)
+    ops = np.asarray(ops)
+    current = np.asarray(current)
+    m = probs.shape[0]
+    thetas = space.as_array()                          # (M, 2)
+    keep = probs > params.tau                          # (m, M)   line 4
+    any_keep = keep.any(axis=1)
+
+    # MinMax over each row's surviving subset (line 6), via masked extrema
+    t3 = thetas[None, :, :]                            # (1, M, 2)
+    lo = np.min(np.where(keep[:, :, None], t3, np.inf), axis=1)
+    hi = np.max(np.where(keep[:, :, None], t3, -np.inf), axis=1)
+    span = np.where(hi - lo > 0, hi - lo, 1.0)
+    norm = (t3 - lo[:, None, :]) / span[:, None, :]    # (m, M, 2)
+
+    w_scores = probs * (1.0 + params.beta * norm.sum(axis=2))
+    r_scores = probs * (1.0 + params.alpha * norm[:, :, 0]) + norm[:, :, 1]
+    scores = np.where((ops == WRITE)[:, None], w_scores, r_scores)
+    scores = np.where(keep, scores, -np.inf)
+
+    j = np.argmax(scores, axis=1)                      # first max, like scalar
+    theta = thetas[j].astype(np.int64)                 # (m, 2)
+    theta = np.where(any_keep[:, None], theta, current.astype(np.int64))
+    changed = any_keep & (theta != current).any(axis=1)
+    score = np.where(any_keep, scores[np.arange(m), j], 0.0)
+    return FleetDecisions(theta=theta, changed=changed,
+                          n_candidates=keep.sum(axis=1) * any_keep,
+                          score=score, probs=probs)

@@ -88,3 +88,80 @@ def forest_margin(x, feature, threshold, leaf, base_score: float, depth: int,
         name="gbdt_forest_margin",
     )(x, feature, threshold, leaf)
     return out[:n]
+
+
+# ---------------------------------------------------------------------- #
+# paired forests: one launch scores mixed read/write rows for the fleet
+# ---------------------------------------------------------------------- #
+def _paired_forest_kernel(x_ref, op_ref, feat_ref, thr_ref, leaf_ref,
+                          base_ref, out_ref, *, depth: int):
+    """Margins for a (BLOCK_N, F) tile with per-row forest selection.
+
+    Both forests (stacked on the leading axis) stay VMEM-resident; each
+    row adds ``op * T * nodes`` to its gather indices, so selecting a
+    forest costs one vector add — no divergence, no second traversal.
+    """
+    x = x_ref[...]                      # (BN, F)  VMEM tile
+    opv = op_ref[...]                   # (BN,)    0 = read, 1 = write
+    feat = feat_ref[...]                # (2, T, I) resident forests
+    thr = thr_ref[...]
+    leaf = leaf_ref[...]
+    base = base_ref[...]                # (2,)
+    bn = x.shape[0]
+    _, t, n_internal = feat.shape
+    n_leaves = leaf.shape[2]
+
+    feat_flat = feat.reshape(-1)
+    thr_flat = thr.reshape(-1)
+    leaf_flat = leaf.reshape(-1)
+    tree_off = jnp.arange(t, dtype=jnp.int32) * n_internal
+    forest_off = opv * (t * n_internal)                 # (BN,)
+
+    idx = jnp.zeros((bn, t), dtype=jnp.int32)
+    for _ in range(depth):
+        node = idx + tree_off[None, :] + forest_off[:, None]
+        f = feat_flat[node]
+        th = thr_flat[node]
+        xv = jnp.take_along_axis(x, f, axis=1)
+        idx = 2 * idx + 1 + (xv > th).astype(jnp.int32)
+
+    leaf_off = jnp.arange(t, dtype=jnp.int32) * n_leaves
+    vals = leaf_flat[(idx - n_internal) + leaf_off[None, :]
+                     + (opv * (t * n_leaves))[:, None]]
+    out_ref[...] = vals.sum(axis=1).astype(jnp.float32) + base[opv]
+
+
+def paired_forest_margin(x, op, feature, threshold, leaf, base, depth: int,
+                         block_n: int = DEFAULT_BLOCK_N,
+                         interpret: bool = True):
+    """Batched margins over two stacked forests with per-row selection.
+
+    Args match :func:`repro.kernels.gbdt_forest.ref.paired_forest_margin_ref`.
+    This is the fleet agent's single launch per tuning tick: all
+    (interface x config) rows for both ops at once.
+    """
+    n, f = x.shape
+    _, t, n_internal = feature.shape
+    n_pad = -n % block_n
+    if n_pad:
+        x = jnp.pad(x, ((0, n_pad), (0, 0)))
+        op = jnp.pad(op, (0, n_pad))
+    grid = ((n + n_pad) // block_n,)
+
+    out = pl.pallas_call(
+        functools.partial(_paired_forest_kernel, depth=depth),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, f), lambda i: (i, 0)),          # sample tile
+            pl.BlockSpec((block_n,), lambda i: (i,)),              # row ops
+            pl.BlockSpec((2, t, n_internal), lambda i: (0, 0, 0)), # forests
+            pl.BlockSpec((2, t, n_internal), lambda i: (0, 0, 0)), #   stay
+            pl.BlockSpec((2, t, leaf.shape[2]), lambda i: (0, 0, 0)),  # in VMEM
+            pl.BlockSpec((2,), lambda i: (0,)),                    # base margins
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n + n_pad,), jnp.float32),
+        interpret=interpret,
+        name="gbdt_paired_forest_margin",
+    )(x, op.astype(jnp.int32), feature, threshold, leaf, base)
+    return out[:n]

@@ -50,3 +50,47 @@ def forest_margin_ref(x, feature, threshold, leaf, base_score: float,
 def forest_proba_ref(x, feature, threshold, leaf, base_score: float, depth: int):
     m = forest_margin_ref(x, feature, threshold, leaf, base_score, depth)
     return 1.0 / (1.0 + jnp.exp(-jnp.clip(m, -30.0, 30.0)))
+
+
+def paired_forest_margin_ref(x, op, feature, threshold, leaf, base,
+                             depth: int):
+    """Margins with per-row forest selection (the fleet inference oracle).
+
+    Two forests (read / write) are stacked on a leading axis; each row of
+    ``x`` traverses the forest named by ``op``.  Selection is just an
+    extra per-row offset into the flattened forest arrays — no extra
+    traversal work for the unselected forest.
+
+    Args:
+        x:         (N, F) float32 samples (F = max of both forests' dims).
+        op:        (N,) int32 forest selector, 0 or 1.
+        feature:   (2, T, 2^D - 1) int32.
+        threshold: (2, T, 2^D - 1) float32 (+inf = pass left).
+        leaf:      (2, T, 2^D) float32.
+        base:      (2,) float32 per-forest base margin.
+        depth:     D, static.
+
+    Returns:
+        (N,) float32 margins (pre-sigmoid).
+    """
+    n = x.shape[0]
+    _, t, n_internal = feature.shape
+    n_leaves = leaf.shape[2]
+    feat_flat = feature.reshape(-1)
+    thr_flat = threshold.reshape(-1)
+    leaf_flat = leaf.reshape(-1)
+    tree_off = jnp.arange(t, dtype=jnp.int32) * n_internal
+    forest_off = op.astype(jnp.int32) * (t * n_internal)     # (N,)
+
+    idx = jnp.zeros((n, t), dtype=jnp.int32)
+    for _ in range(depth):
+        node = idx + tree_off[None, :] + forest_off[:, None]
+        f = feat_flat[node]
+        thr = thr_flat[node]
+        xv = jnp.take_along_axis(x, f, axis=1)
+        idx = 2 * idx + 1 + (xv > thr).astype(jnp.int32)
+    leaf_off = jnp.arange(t, dtype=jnp.int32) * n_leaves
+    leaf_forest_off = op.astype(jnp.int32) * (t * n_leaves)
+    vals = leaf_flat[(idx - n_internal) + leaf_off[None, :]
+                     + leaf_forest_off[:, None]]
+    return vals.sum(axis=1).astype(jnp.float32) + base[op]

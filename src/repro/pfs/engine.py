@@ -152,11 +152,16 @@ class PFSSim:
 
     def set_knobs(self, osc_ids, window_pages=None, rpcs_in_flight=None) -> None:
         """Apply DIAL's theta to one or more OSC interfaces (takes effect
-        next tick, mirroring ``lctl set_param`` latency)."""
+        next tick, mirroring ``lctl set_param`` latency).
+
+        Either knob may be a scalar (broadcast over ``osc_ids``) or an
+        array aligned with ``osc_ids`` — the fleet agent applies a whole
+        tick's decisions in one fancy-indexed assignment.
+        """
         if window_pages is not None:
-            self.window_pages[osc_ids] = int(window_pages)
+            self.window_pages[osc_ids] = np.asarray(window_pages, dtype=np.int64)
         if rpcs_in_flight is not None:
-            self.rpcs_in_flight[osc_ids] = int(rpcs_in_flight)
+            self.rpcs_in_flight[osc_ids] = np.asarray(rpcs_in_flight, dtype=np.int64)
 
     def attach(self, workload) -> None:
         workload.bind(self)

@@ -70,3 +70,128 @@ def probe(sim, osc: int) -> OSCStats:
 def probe_client(sim, client: int) -> dict:
     """Probe every OSC interface of one client (what a DIAL agent sees)."""
     return {int(osc): probe(sim, int(osc)) for osc in sim.client_oscs(client)}
+
+
+# ---------------------------------------------------------------------- #
+# fleet probing: stacked counters for many OSC interfaces at once
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass
+class FleetStats:
+    """Cumulative counters for *many* OSC interfaces at one instant.
+
+    Column ``i`` of every array is the interface ``oscs[i]`` — the same
+    fields as :class:`OSCStats`, stacked so one probe of the whole fleet
+    is a handful of fancy-indexed array copies instead of a Python loop.
+    Per-op arrays are shaped ``(2, n)``, per-OSC scalars ``(n,)``.
+    """
+
+    t: float
+    oscs: np.ndarray                # (n,) interface ids
+    bytes_done: np.ndarray          # (2, n)
+    rpcs_sent: np.ndarray
+    rpc_bytes: np.ndarray
+    partial_rpcs: np.ndarray
+    latency_sum: np.ndarray
+    rpcs_done: np.ndarray
+    req_count: np.ndarray
+    req_bytes: np.ndarray
+    pending_integral: np.ndarray
+    active_integral: np.ndarray
+    cache_hit_bytes: np.ndarray     # (n,)
+    block_time: np.ndarray
+    dirty_integral: np.ndarray
+    grant_integral: np.ndarray
+    randomness: np.ndarray          # (2, n)
+    window_pages: np.ndarray        # (n,) int64
+    rpcs_in_flight: np.ndarray      # (n,) int64
+
+    def __len__(self) -> int:
+        return len(self.oscs)
+
+    def one(self, i: int) -> OSCStats:
+        """Column ``i`` as a scalar :class:`OSCStats` (compat / debugging)."""
+        return OSCStats(
+            t=self.t,
+            bytes_done=self.bytes_done[:, i].copy(),
+            rpcs_sent=self.rpcs_sent[:, i].copy(),
+            rpc_bytes=self.rpc_bytes[:, i].copy(),
+            partial_rpcs=self.partial_rpcs[:, i].copy(),
+            latency_sum=self.latency_sum[:, i].copy(),
+            rpcs_done=self.rpcs_done[:, i].copy(),
+            req_count=self.req_count[:, i].copy(),
+            req_bytes=self.req_bytes[:, i].copy(),
+            pending_integral=self.pending_integral[:, i].copy(),
+            active_integral=self.active_integral[:, i].copy(),
+            cache_hit_bytes=float(self.cache_hit_bytes[i]),
+            block_time=float(self.block_time[i]),
+            dirty_integral=float(self.dirty_integral[i]),
+            grant_integral=float(self.grant_integral[i]),
+            randomness=self.randomness[:, i].copy(),
+            window_pages=int(self.window_pages[i]),
+            rpcs_in_flight=int(self.rpcs_in_flight[i]),
+        )
+
+
+def probe_all(sim, oscs=None) -> FleetStats:
+    """Snapshot the counters of many OSC interfaces in one shot.
+
+    Reads the simulator's flat counter arrays directly (one fancy-indexed
+    copy per field), so the cost is independent of how many Python-level
+    agents exist — this is the fleet agent's probe path.
+    """
+    oscs = (np.arange(sim.n_osc) if oscs is None
+            else np.asarray(oscs, dtype=np.int64))
+    return FleetStats(
+        t=sim.now,
+        oscs=oscs,
+        bytes_done=sim.ctr_bytes_done[:, oscs].copy(),
+        rpcs_sent=sim.ctr_rpcs_sent[:, oscs].copy(),
+        rpc_bytes=sim.ctr_rpc_bytes[:, oscs].copy(),
+        partial_rpcs=sim.ctr_partial_rpcs[:, oscs].copy(),
+        latency_sum=sim.ctr_latency_sum[:, oscs].copy(),
+        rpcs_done=sim.ctr_rpcs_done[:, oscs].copy(),
+        req_count=sim.ctr_req_count[:, oscs].copy(),
+        req_bytes=sim.ctr_req_bytes[:, oscs].copy(),
+        pending_integral=sim.ctr_pending_integral[:, oscs].copy(),
+        active_integral=sim.ctr_active_integral[:, oscs].copy(),
+        cache_hit_bytes=sim.ctr_cache_hit_bytes[oscs].copy(),
+        block_time=sim.ctr_block_time[oscs].copy(),
+        dirty_integral=sim.ctr_dirty_integral[oscs].copy(),
+        grant_integral=sim.ctr_grant_integral[oscs].copy(),
+        randomness=sim.randomness[:, oscs].copy(),
+        window_pages=sim.window_pages[oscs].copy(),
+        rpcs_in_flight=sim.rpcs_in_flight[oscs].copy(),
+    )
+
+
+def stack_stats(stats: list[OSCStats], oscs) -> FleetStats:
+    """Stack per-interface :class:`OSCStats` into one :class:`FleetStats`.
+
+    Fallback for :class:`~repro.core.fleet.FleetPort` adapters over systems
+    that only expose per-interface probes; the simulator fast path is
+    :func:`probe_all`.
+    """
+    col = (lambda name: np.stack([getattr(s, name) for s in stats], axis=-1)
+           ) if stats else (lambda name: np.zeros((2, 0)))
+    vec = lambda name: np.array([getattr(s, name) for s in stats])
+    return FleetStats(
+        t=stats[0].t if stats else 0.0,
+        oscs=np.asarray(oscs, dtype=np.int64),
+        bytes_done=col("bytes_done"),
+        rpcs_sent=col("rpcs_sent"),
+        rpc_bytes=col("rpc_bytes"),
+        partial_rpcs=col("partial_rpcs"),
+        latency_sum=col("latency_sum"),
+        rpcs_done=col("rpcs_done"),
+        req_count=col("req_count"),
+        req_bytes=col("req_bytes"),
+        pending_integral=col("pending_integral"),
+        active_integral=col("active_integral"),
+        cache_hit_bytes=vec("cache_hit_bytes"),
+        block_time=vec("block_time"),
+        dirty_integral=vec("dirty_integral"),
+        grant_integral=vec("grant_integral"),
+        randomness=col("randomness"),
+        window_pages=vec("window_pages").astype(np.int64),
+        rpcs_in_flight=vec("rpcs_in_flight").astype(np.int64),
+    )

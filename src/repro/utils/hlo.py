@@ -80,8 +80,11 @@ class CollectiveStats:
 # signatures may contain nested tuple parens, so match loosely to the
 # trailing "{" instead of balancing parens
 _COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$", re.M)
+# the while operand may be printed bare (`while(%tuple.2)`) or with its
+# full tuple type (`while((s32[], f32[8,16]{1,0}) %tuple.2)`) depending on
+# the XLA version; greedy `.*` spans nested parens within the line
 _WHILE_RE = re.compile(
-    r"while\([^)]*\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+    r"while\(.*\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
 _CALL_RE = re.compile(r"(?:calls|to_apply|branch_computations)="
                       r"[{]?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)[}]?")
 _CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")

@@ -2,7 +2,12 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # property-based fuzzing when available; seeded sweep otherwise
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.pfs import PFSSim, SimParams
 from repro.pfs.engine import READ, WRITE
@@ -23,12 +28,7 @@ def run_stream(op, wl_fn, req, window, inflight, n_threads=1, seconds=6.0,
 # ---------------------------------------------------------------------- #
 # physics invariants
 # ---------------------------------------------------------------------- #
-@settings(max_examples=15, deadline=None)
-@given(window=st.sampled_from([16, 64, 256, 1024]),
-       inflight=st.sampled_from([1, 2, 4, 8, 16, 32]),
-       req=st.sampled_from([8 * 1024, 1 * 2**20, 16 * 2**20]),
-       rand=st.booleans(), op=st.sampled_from([READ, WRITE]))
-def test_throughput_never_exceeds_physics(window, inflight, req, rand, op):
+def _check_throughput_never_exceeds_physics(window, inflight, req, rand, op):
     """Delivered bytes can never exceed OST bandwidth (+ write-cache slack)."""
     fn = random_stream if rand else sequential_stream
     tput, sim = run_stream(op, fn, req, window, inflight, n_threads=4)
@@ -38,10 +38,32 @@ def test_throughput_never_exceeds_physics(window, inflight, req, rand, op):
     assert tput <= cap + slack + 1.0
 
 
-@settings(max_examples=10, deadline=None)
-@given(window=st.sampled_from([16, 64, 256, 1024]),
-       inflight=st.sampled_from([1, 4, 16]))
-def test_counters_monotonic_nonnegative(window, inflight):
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(window=st.sampled_from([16, 64, 256, 1024]),
+           inflight=st.sampled_from([1, 2, 4, 8, 16, 32]),
+           req=st.sampled_from([8 * 1024, 1 * 2**20, 16 * 2**20]),
+           rand=st.booleans(), op=st.sampled_from([READ, WRITE]))
+    def test_throughput_never_exceeds_physics(window, inflight, req, rand, op):
+        _check_throughput_never_exceeds_physics(window, inflight, req, rand, op)
+else:
+    _PHYSICS_CASES = [
+        (16, 1, 8 * 1024, False, READ),
+        (16, 32, 16 * 2**20, True, WRITE),
+        (64, 4, 1 * 2**20, True, READ),
+        (64, 16, 8 * 1024, False, WRITE),
+        (256, 8, 16 * 2**20, False, READ),
+        (256, 2, 1 * 2**20, True, WRITE),
+        (1024, 32, 16 * 2**20, False, WRITE),
+        (1024, 8, 8 * 1024, True, READ),
+    ]
+
+    @pytest.mark.parametrize("window,inflight,req,rand,op", _PHYSICS_CASES)
+    def test_throughput_never_exceeds_physics(window, inflight, req, rand, op):
+        _check_throughput_never_exceeds_physics(window, inflight, req, rand, op)
+
+
+def _check_counters_monotonic_nonnegative(window, inflight):
     sim = PFSSim(n_clients=2, n_osts=4, seed=1)
     sim.attach(sequential_stream(0, READ, 2**20, ost=0))
     sim.attach(random_stream(1, WRITE, 8192, ost=0, n_threads=4))
@@ -61,6 +83,19 @@ def test_counters_monotonic_nonnegative(window, inflight):
     # fluid state sanity
     assert (sim.dirty_bytes >= -1e-6).all()
     assert (sim.active_rpcs >= -1e-6).all()
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(window=st.sampled_from([16, 64, 256, 1024]),
+           inflight=st.sampled_from([1, 4, 16]))
+    def test_counters_monotonic_nonnegative(window, inflight):
+        _check_counters_monotonic_nonnegative(window, inflight)
+else:
+    @pytest.mark.parametrize("window,inflight",
+                             [(16, 1), (64, 16), (256, 4), (1024, 16)])
+    def test_counters_monotonic_nonnegative(window, inflight):
+        _check_counters_monotonic_nonnegative(window, inflight)
 
 
 def test_determinism():
