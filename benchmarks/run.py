@@ -11,6 +11,7 @@ import time
 def main() -> None:
     import benchmarks.fig3_dlio as fig3
     import benchmarks.fleet_scaling as fleet
+    import benchmarks.sim_scaling as simsc
     import benchmarks.table2_h5bench as t2
     import benchmarks.table3_overhead as t3
 
@@ -43,6 +44,14 @@ def main() -> None:
           f"fleet_ms_per_osc={rf['fleet_ms']:.3f};"
           f"loop_ms_per_osc={rf['loop_ms']:.3f};"
           f"speedup={rf['speedup']:.1f}x")
+
+    t0 = time.time()
+    rs = simsc.bench(256)
+    el = (time.time() - t0) * 1e6
+    print(f"sim_scaling,{el:.0f},"
+          f"loop_tps={rs['loop_ticks_per_s']:.0f};"
+          f"fused_tps={rs['fused_ticks_per_s']:.0f};"
+          f"speedup={rs['speedup']:.1f}x")
 
     print("\n--- Table II detail ---")
     for r in rows2:

@@ -271,16 +271,46 @@ class FleetAgent:
 
 def run_fleet(sim, model: DIALModel, oscs=None, seconds: float = 10.0,
               interval: float = 0.5, measure_overhead: bool = False,
-              tuner_params: TunerParams = TunerParams()) -> FleetAgent:
+              tuner_params: TunerParams = TunerParams(),
+              backend: str = "numpy", seg_backend: str = "auto") -> FleetAgent:
     """Drive the simulator with one fleet agent over ``oscs`` (default
-    all interfaces) — the batched counterpart of ``run_with_agents``."""
+    all interfaces) — the batched counterpart of ``run_with_agents``.
+
+    ``backend`` selects the engine execution layer between tuning ticks:
+
+    * ``"numpy"`` — the historical Python tick loop (``sim.step()`` per
+      tick, legacy Workload objects depositing demand);
+    * ``"jax"``   — the fused interval path: the attached workloads are
+      frozen into a :class:`~repro.pfs.workloads.WorkloadTable` and each
+      whole interval advances through one jitted ``lax.scan``
+      (:class:`~repro.pfs.engine_jax.FusedEngine`), with per-OST/client
+      reductions on the shared segment-sum kernel (``seg_backend``).
+
+    Probing, tuning, and knob actuation are identical in both cases —
+    the fleet agent reads and writes the same ``SimState``.
+    """
     fleet = FleetAgent(SimFleetPort(sim, oscs), model,
                        tuner_params=tuner_params,
                        measure_overhead=measure_overhead)
     steps_per_interval = max(int(round(interval / sim.params.tick)), 1)
     n_intervals = int(round(seconds / interval))
-    for _ in range(n_intervals):
-        for _ in range(steps_per_interval):
-            sim.step()
-        fleet.tick()
+    if backend == "numpy":
+        for _ in range(n_intervals):
+            for _ in range(steps_per_interval):
+                sim.step()
+            fleet.tick()
+    elif backend == "jax":
+        from repro.pfs.engine_jax import FusedEngine
+        from repro.pfs.workloads import (sync_workloads_from_table,
+                                         table_from_sim)
+
+        table, wstate = table_from_sim(sim)
+        engine = FusedEngine(sim.params, sim.topo, table,
+                             steps_per_interval, seg_backend=seg_backend)
+        for _ in range(n_intervals):
+            sim.state, wstate = engine.run_interval(sim.state, wstate)
+            fleet.tick()
+        sync_workloads_from_table(sim, wstate)
+    else:
+        raise ValueError(f"unknown engine backend {backend!r}")
     return fleet

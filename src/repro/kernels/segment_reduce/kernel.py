@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: segment sum as a one-hot matmul.
+
+The engine's per-tick reductions (OST setup-work/IOPS/bandwidth
+aggregation over OSCs, NIC aggregation over clients, workload stripe
+scatter/gather) are all segment sums over a *static* segment mapping.
+XLA lowers ``jax.ops.segment_sum`` to scatter-add, which serializes on
+TPU; with a static, small segment count the same reduction is one
+``(1, E) @ (E, S)`` one-hot matmul — dense MXU work, no scatter at all.
+
+The values axis is tiled by BlockSpec; each grid step builds the one-hot
+block on the fly from the resident segment-id tile (iota compare — never
+materialized in HBM) and accumulates its partial product into the single
+(S,)-block output, which stays VMEM-resident across the whole grid.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_E = 1024
+
+
+def _segment_sum_kernel(x_ref, seg_ref, out_ref, *, num_segments: int):
+    """One grid step: accumulate a (BLOCK_E,) tile into the (S,) output."""
+    x = x_ref[...].astype(jnp.float32)          # (BE,)
+    seg = seg_ref[...]                          # (BE,) int32
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # one-hot built in VMEM from an iota compare; (1, BE) @ (BE, S) on MXU
+    onehot = (seg[:, None]
+              == jax.lax.broadcasted_iota(jnp.int32, (1, num_segments), 1)
+              ).astype(jnp.float32)
+    partial = jnp.dot(x[None, :], onehot,
+                      preferred_element_type=jnp.float32)[0]
+    out_ref[...] += partial
+
+
+def segment_sum(values, segment_ids, num_segments: int,
+                block_e: int = DEFAULT_BLOCK_E, interpret: bool = True):
+    """Segment sum of 1-D ``values`` via one-hot matmul tiles.
+
+    ``interpret=True`` executes on CPU (validation); on TPU pass False.
+    Out-of-range padding ids are handled by padding with ``num_segments``
+    (their one-hot row is all zeros, so they contribute nothing).
+    """
+    e = values.shape[0]
+    e_pad = -e % block_e
+    if e_pad:
+        values = jnp.pad(values, (0, e_pad))
+        segment_ids = jnp.pad(segment_ids, (0, e_pad),
+                              constant_values=num_segments)
+    grid = ((e + e_pad) // block_e,)
+
+    out = pl.pallas_call(
+        functools.partial(_segment_sum_kernel, num_segments=num_segments),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e,), lambda i: (i,)),    # values tile
+            pl.BlockSpec((block_e,), lambda i: (i,)),    # segment-id tile
+        ],
+        out_specs=pl.BlockSpec((num_segments,), lambda i: (0,)),  # resident
+        out_shape=jax.ShapeDtypeStruct((num_segments,), jnp.float32),
+        interpret=interpret,
+        name="segment_sum_onehot",
+    )(values, segment_ids.astype(jnp.int32))
+    return out

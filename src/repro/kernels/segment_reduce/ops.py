@@ -1,0 +1,61 @@
+"""Shared segment-sum helper: the engine's one reduction primitive.
+
+Every per-tick aggregation in the PFS engine (six historical
+``np.bincount`` call sites across formation/drain/bandwidth plus the
+workload stripe scatter) routes through :func:`segment_sum`, so one
+dispatch decides the execution strategy for the whole tick:
+
+==========  ============================================================
+backend      implementation
+==========  ============================================================
+``numpy``    ``np.bincount(..., weights=...)`` (the oracle)
+``jax``      ``jax.ops.segment_sum`` (XLA scatter-add; CPU/GPU default)
+``pallas``   one-hot-matmul Pallas kernel (TPU default; MXU, no scatter)
+``auto``     pallas on TPU, jax elsewhere
+==========  ============================================================
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+# NOTE: the jax/pallas implementations are imported lazily inside
+# make_segment_sum so that the numpy oracle (and everything that imports
+# it, e.g. repro.pfs.workloads) stays importable without jax.
+
+
+def segment_sum_np(values, segment_ids, num_segments: int):
+    """Numpy oracle: ``np.bincount`` with weights."""
+    return np.bincount(segment_ids, weights=np.asarray(values, dtype=float),
+                       minlength=num_segments)
+
+
+@functools.lru_cache(maxsize=1)
+def _default_jax_backend() -> str:
+    import jax
+    return "pallas" if jax.default_backend() == "tpu" else "jax"
+
+
+def make_segment_sum(backend: str = "auto"):
+    """Return ``segment_sum(values, segment_ids, num_segments)`` for a
+    backend name; the returned callable is safe to close over under jit."""
+    if backend == "numpy":
+        return segment_sum_np
+    if backend == "auto":
+        backend = _default_jax_backend()
+    if backend == "jax":
+        from repro.kernels.segment_reduce import ref as _ref
+        return _ref.segment_sum_ref
+    if backend in ("pallas", "pallas_interpret"):
+        from repro.kernels.segment_reduce import kernel as _kernel
+        interpret = backend == "pallas_interpret"
+        return functools.partial(_kernel.segment_sum, interpret=interpret)
+    raise ValueError(f"unknown segment_sum backend {backend!r}")
+
+
+def segment_sum(values, segment_ids, num_segments: int,
+                backend: str = "auto"):
+    """One-call convenience over :func:`make_segment_sum`."""
+    return make_segment_sum(backend)(values, segment_ids, num_segments)

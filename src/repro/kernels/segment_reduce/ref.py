@@ -1,0 +1,11 @@
+"""Reference segment sum: jax.ops.segment_sum (XLA scatter-add)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def segment_sum_ref(values, segment_ids, num_segments: int):
+    """``out[s] = sum(values[segment_ids == s])`` over 1-D values."""
+    return jax.ops.segment_sum(values, segment_ids,
+                               num_segments=num_segments)

@@ -24,30 +24,48 @@ paper's tuner exploits:
 * the write path adds grants and a dirty-page cache: writes complete into
   the cache until it fills, then the app throttles to the flush rate.
 
+The engine is layered (see docs/ARCHITECTURE.md):
+
+    state layer      repro.pfs.state      SimState pytree + pure engine_step
+    workload layer   repro.pfs.workloads  Workload objects + WorkloadTable
+    execution layer  repro.pfs.engine     stateful numpy wrapper (PFSSim)
+                     repro.pfs.engine_jax fused lax.scan interval path
+
 Public API:
-    SimParams, PFSSim          -- engine (repro.pfs.engine)
+    SimParams, PFSSim          -- stateful wrapper (repro.pfs.engine)
+    SimTopo, SimState, engine_step -- pure core (repro.pfs.state)
     Workload + generators      -- repro.pfs.workloads
+    WorkloadTable              -- vectorized fleet demand (same module)
     OSCStats snapshots         -- repro.pfs.stats
     TUNABLE knobs              -- window_pages / rpcs_in_flight per OSC
 """
 
 from repro.pfs.engine import PFSSim, SimParams, PAGE_SIZE
+from repro.pfs.state import SimState, SimTopo, engine_step, init_state
 from repro.pfs.workloads import (
     Workload,
+    WorkloadTable,
     sequential_stream,
     random_stream,
     strided_stream,
     vpic_write,
     bdcats_read,
     dlio_reader,
+    table_from_sim,
 )
 from repro.pfs.stats import OSCStats
 
 __all__ = [
     "PFSSim",
     "SimParams",
+    "SimTopo",
+    "SimState",
+    "engine_step",
+    "init_state",
     "PAGE_SIZE",
     "Workload",
+    "WorkloadTable",
+    "table_from_sim",
     "sequential_stream",
     "random_stream",
     "strided_stream",

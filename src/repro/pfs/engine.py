@@ -1,86 +1,47 @@
-"""Vectorized fluid engine for the simulated Lustre client I/O path.
+"""Stateful wrapper over the pure PFS engine core.
 
-State lives in flat numpy arrays indexed by *OSC id* (one OSC per
-(client, OST) pair, exactly like Lustre's per-target Object Storage
-Client interfaces).  Every tick advances all OSCs at once:
+The engine itself lives in :mod:`repro.pfs.state` as a flat
+:class:`~repro.pfs.state.SimState` dataclass plus the pure transition
+:func:`~repro.pfs.state.engine_step` — see that module for the model
+documentation (RPC formation, dispatch, OST drain, bandwidth sharing,
+grant/dirty write-back).  :class:`PFSSim` keeps the historical mutable
+interface every caller knows:
 
-    1. workloads deposit demand           (closed-loop readers / writers)
-    2. RPC formation                      (window batching + partial hold)
-    3. dispatch                           (bounded by rpcs_in_flight)
-    4. OST setup-server drain             (per-RPC fixed overhead + IOPS cap)
-    5. bandwidth allocation               (OST bw fair share, NIC cap)
-    6. completion + stats accounting
+* attribute access (``sim.ctr_bytes_done`` …) transparently reads the
+  current ``SimState`` arrays, so :mod:`repro.pfs.stats` probing and all
+  tests/benchmarks work unchanged;
+* legacy :class:`~repro.pfs.workloads.Workload` objects still deposit
+  demand through :meth:`submit_read` / :meth:`submit_write` (in-place on
+  the state arrays), after which :meth:`step` advances via the pure
+  function;
+* the vectorized/fused paths (:class:`~repro.pfs.workloads.WorkloadTable`
+  + :mod:`repro.pfs.engine_jax`) operate on the same ``SimState`` and
+  sync back through :attr:`state`.
 
 The two DIAL-tunable knobs are per-OSC arrays: ``window_pages``
 (= Lustre ``osc.*.max_pages_per_rpc``) and ``rpcs_in_flight``
 (= ``osc.*.max_rpcs_in_flight``).  Both take effect on the next tick,
 mirroring Lustre's near-real-time application of these parameters (SII-B).
-
-Model regimes (why the tuner has something to learn):
-
-* throughput of one OSC pipeline  ~ in_flight * rpc_size / rpc_latency,
-  capped by its fair share of OST bandwidth and by the OST IOPS ceiling;
-* rpc_latency = setup(randomness) + rtt + transfer + (hold if the window
-  was not filled) -- so a too-large window starves channels under sparse
-  demand (the paper's SII-B motivation) while a too-small window wastes
-  the IOPS budget under heavy demand;
-* writes absorb into a dirty cache until grant/dirty limits bind, then the
-  application throttles to the flush rate (Lustre grant mechanics, SIII-B).
 """
 
 from __future__ import annotations
 
-import dataclasses
-
 import numpy as np
 
-PAGE_SIZE = 4096  # bytes, Linux page
+from repro.pfs.state import (PAGE_SIZE, READ, WRITE, SimParams, SimState,
+                             SimTopo, engine_step, init_state)
 
-# Operation codes.
-READ = 0
-WRITE = 1
-
-
-@dataclasses.dataclass(frozen=True)
-class SimParams:
-    """Physical constants of the simulated cluster.
-
-    Defaults are calibrated against the paper's CloudLab c6525-25g testbed
-    (SIV-A): 4 OSS x 2 OST on SATA SSDs behind 25 GbE, which delivers
-    single-client streams in the 300-460 MB/s range (paper Table II).
-    """
-
-    tick: float = 0.005                # simulation step [s]
-    ost_bandwidth: float = 520e6       # per-OST service bandwidth [B/s]
-    ost_setup_parallel: float = 4.0    # concurrent setup contexts per OST
-    ost_iops: float = 2600.0           # per-OST RPC completions per second
-    setup_time_seq: float = 300e-6     # fixed overhead per sequential RPC [s]
-    setup_time_rand: float = 3.5e-3    # extra overhead for fully random RPC [s]
-    rtt: float = 120e-6                # client<->OSS network round trip [s]
-    nic_bandwidth: float = 2.9e9       # per-client NIC cap [B/s]
-    hold_time_read: float = 0.012      # OSC holds a partial read RPC [s]
-    hold_time_write: float = 0.025     # writes plug longer (write-behind)
-    ost_buffer_bytes: float = 64 * 2**20  # OST service-queue comfort zone
-    congestion_exp: float = 0.35       # service efficiency decay past buffer
-    max_dirty_bytes: float = 64 * 2**20   # per-OSC dirty cache limit
-    grant_bytes: float = 96 * 2**20       # per-OSC server grant
-    readahead_bytes: float = 8 * 2**20 # client readahead pipeline depth
-    max_rpc_queue: int = 4096          # formed-but-unsent RPC cap per OSC
-
-    def setup_time(self, randomness: np.ndarray) -> np.ndarray:
-        """Per-RPC fixed overhead as a function of access randomness in [0,1]."""
-        return self.setup_time_seq + randomness * self.setup_time_rand
-
-    def hold_time(self, op: int) -> float:
-        return self.hold_time_read if op == READ else self.hold_time_write
+__all__ = ["PFSSim", "SimParams", "SimTopo", "SimState", "engine_step",
+           "init_state", "PAGE_SIZE", "READ", "WRITE"]
 
 
 class PFSSim:
     """Discrete-time simulator of clients -> OSC -> RPC -> OST.
 
     Construction wires a static topology; workloads attach to clients and
-    drive demand each tick.  All mutable state is numpy arrays so a tick is
-    a handful of vectorized ops regardless of OSC count.
+    drive demand each tick.  All mutable state is numpy arrays in one
+    :class:`SimState`, so a tick is a handful of vectorized ops regardless
+    of OSC count.
     """
 
     def __init__(
@@ -91,64 +52,50 @@ class PFSSim:
         seed: int = 0,
     ):
         self.params = params or SimParams()
-        self.n_clients = n_clients
-        self.n_osts = n_osts
+        self.topo = SimTopo.dense(n_clients, n_osts)
         self.rng = np.random.default_rng(seed)
-        self.now = 0.0
-        self.tick_index = 0
-
-        n = n_clients * n_osts  # one OSC per (client, ost), like Lustre LOV
-        self.n_osc = n
-        self.osc_client = np.repeat(np.arange(n_clients), n_osts)
-        self.osc_ost = np.tile(np.arange(n_osts), n_clients)
-
-        # --- tunable knobs (DIAL's theta), per OSC ------------------------
-        self.window_pages = np.full(n, 256, dtype=np.int64)   # Lustre default 1 MiB
-        self.rpcs_in_flight = np.full(n, 8, dtype=np.int64)   # Lustre default
-
-        # --- per-OSC, per-op fluid state ----------------------------------
-        self.pending = np.zeros((2, n))      # bytes not yet packed into RPCs
-        self.hold_age = np.zeros((2, n))
-        self.queue_rpcs = np.zeros((2, n))   # formed, waiting for a slot
-        self.queue_bytes = np.zeros((2, n))
-        self.active_rpcs = np.zeros((2, n))  # dispatched, in the pipeline
-        self.setup_work = np.zeros((2, n))   # seconds of setup left (aggregate)
-        self.unready_bytes = np.zeros((2, n))
-        self.ready_bytes = np.zeros((2, n))  # setup done, transferring
-        self.active_avg_size = np.full((2, n), float(PAGE_SIZE))
-        self.dispatch_time_num = np.zeros((2, n))
-        self.randomness = np.zeros((2, n))   # EMA of workload offset jumps
-        # --- write path extras --------------------------------------------
-        self.dirty_bytes = np.zeros(n)
-        self.grant_used = np.zeros(n)
-        self.write_blocked = np.zeros(n, dtype=bool)  # cache full last tick
-        # --- cumulative counters (the "/proc" the client can probe) -------
-        zeros2 = lambda: np.zeros((2, n))
-        self.ctr_bytes_done = zeros2()
-        self.ctr_rpcs_sent = zeros2()
-        self.ctr_rpc_bytes = zeros2()
-        self.ctr_partial_rpcs = zeros2()
-        self.ctr_latency_sum = zeros2()
-        self.ctr_rpcs_done = zeros2()
-        self.ctr_req_count = zeros2()
-        self.ctr_req_bytes = zeros2()
-        self.ctr_cache_hit_bytes = np.zeros(n)
-        self.ctr_block_time = np.zeros(n)
-        self.ctr_pending_integral = zeros2()
-        self.ctr_active_integral = zeros2()
-        self.ctr_dirty_integral = np.zeros(n)
-        self.ctr_grant_integral = np.zeros(n)
-
+        self.state = init_state(self.topo)
         self._workloads: list = []
+
+    # ------------------------------------------------------------------ #
+    # state delegation: sim.<field> reads the current SimState array
+    # ------------------------------------------------------------------ #
+    def __getattr__(self, name: str):
+        # only called when normal attribute lookup fails
+        state = self.__dict__.get("state")
+        if state is not None and hasattr(state, name):
+            return getattr(state, name)
+        raise AttributeError(
+            f"{type(self).__name__!s} object has no attribute {name!r}")
+
+    @property
+    def n_clients(self) -> int:
+        return self.topo.n_clients
+
+    @property
+    def n_osts(self) -> int:
+        return self.topo.n_osts
+
+    @property
+    def n_osc(self) -> int:
+        return self.topo.n_osc
+
+    @property
+    def osc_client(self) -> np.ndarray:
+        return self.topo.osc_client
+
+    @property
+    def osc_ost(self) -> np.ndarray:
+        return self.topo.osc_ost
 
     # ------------------------------------------------------------------ #
     # topology / knob helpers
     # ------------------------------------------------------------------ #
     def osc_id(self, client: int, ost: int) -> int:
-        return client * self.n_osts + ost
+        return self.topo.osc_id(client, ost)
 
     def client_oscs(self, client: int) -> np.ndarray:
-        return np.arange(client * self.n_osts, (client + 1) * self.n_osts)
+        return self.topo.client_oscs(client)
 
     def set_knobs(self, osc_ids, window_pages=None, rpcs_in_flight=None) -> None:
         """Apply DIAL's theta to one or more OSC interfaces (takes effect
@@ -159,28 +106,31 @@ class PFSSim:
         tick's decisions in one fancy-indexed assignment.
         """
         if window_pages is not None:
-            self.window_pages[osc_ids] = np.asarray(window_pages, dtype=np.int64)
+            self.state.window_pages[osc_ids] = np.asarray(window_pages,
+                                                          dtype=np.int64)
         if rpcs_in_flight is not None:
-            self.rpcs_in_flight[osc_ids] = np.asarray(rpcs_in_flight, dtype=np.int64)
+            self.state.rpcs_in_flight[osc_ids] = np.asarray(rpcs_in_flight,
+                                                            dtype=np.int64)
 
     def attach(self, workload) -> None:
         workload.bind(self)
         self._workloads.append(workload)
 
     # ------------------------------------------------------------------ #
-    # demand entry points used by workloads
+    # demand entry points used by legacy Workload objects
     # ------------------------------------------------------------------ #
     def submit_read(self, osc: int, nbytes: float, randomness: float,
                     req_size: float) -> float:
         """App issues read requests totalling ``nbytes``.  All bytes flow
         through the RPC pipeline (readahead hides latency in the workload's
         closed loop, it does not conjure bandwidth)."""
-        self.pending[READ, osc] += nbytes
+        s = self.state
+        s.pending[READ, osc] += nbytes
         self._mix_randomness(READ, osc, nbytes, randomness)
-        self.ctr_req_count[READ, osc] += max(nbytes / max(req_size, 1.0), 1.0)
-        self.ctr_req_bytes[READ, osc] += nbytes
+        s.ctr_req_count[READ, osc] += max(nbytes / max(req_size, 1.0), 1.0)
+        s.ctr_req_bytes[READ, osc] += nbytes
         # observable proxy for llite readahead hit counters
-        self.ctr_cache_hit_bytes[osc] += (1.0 - randomness) * nbytes
+        s.ctr_cache_hit_bytes[osc] += (1.0 - randomness) * nbytes
         return nbytes
 
     def submit_write(self, osc: int, nbytes: float, randomness: float,
@@ -188,197 +138,36 @@ class PFSSim:
         """App writes ``nbytes``; bytes land in the dirty cache if grant and
         dirty limits allow, else the writer blocks (accepted < nbytes)."""
         p = self.params
+        s = self.state
         room = min(
-            p.max_dirty_bytes - self.dirty_bytes[osc],
-            p.grant_bytes - self.grant_used[osc],
+            p.max_dirty_bytes - s.dirty_bytes[osc],
+            p.grant_bytes - s.grant_used[osc],
         )
         accepted = float(np.clip(nbytes, 0.0, max(room, 0.0)))
-        self.dirty_bytes[osc] += accepted
-        self.grant_used[osc] += accepted
+        s.dirty_bytes[osc] += accepted
+        s.grant_used[osc] += accepted
         self._mix_randomness(WRITE, osc, accepted, randomness)
-        self.ctr_req_count[WRITE, osc] += max(nbytes / max(req_size, 1.0), 1.0)
-        self.ctr_req_bytes[WRITE, osc] += accepted
+        s.ctr_req_count[WRITE, osc] += max(nbytes / max(req_size, 1.0), 1.0)
+        s.ctr_req_bytes[WRITE, osc] += accepted
         # app-visible write completion == acceptance into the cache
-        self.ctr_bytes_done[WRITE, osc] += accepted
-        self.write_blocked[osc] = accepted < nbytes
+        s.ctr_bytes_done[WRITE, osc] += accepted
+        s.write_blocked[osc] = accepted < nbytes
         return accepted
 
     def _mix_randomness(self, op: int, osc: int, nbytes: float, r: float) -> None:
+        s = self.state
         w = min(nbytes / (4 * 2**20), 1.0)
-        self.randomness[op, osc] = (1 - 0.2 * w) * self.randomness[op, osc] + 0.2 * w * r
+        s.randomness[op, osc] = (1 - 0.2 * w) * s.randomness[op, osc] + 0.2 * w * r
 
     # ------------------------------------------------------------------ #
     # the tick
     # ------------------------------------------------------------------ #
     def step(self) -> None:
-        p = self.params
-        dt = p.tick
-
-        # (1) workloads deposit demand
+        # (1) workloads deposit demand (mutates state arrays in place) …
         for w in self._workloads:
-            w.tick(self, dt)
-
-        # write path: dirty cache continuously feeds the pending queue
-        in_pipe = (self.pending[WRITE] + self.queue_bytes[WRITE]
-                   + self.unready_bytes[WRITE] + self.ready_bytes[WRITE])
-        self.pending[WRITE] += np.maximum(self.dirty_bytes - in_pipe, 0.0)
-
-        # (2) RPC formation: full windows pack immediately; partials wait
-        # up to hold_time hoping more data shows up (Lustre plugging).
-        win_bytes = (self.window_pages * PAGE_SIZE).astype(float)
-        for op in (READ, WRITE):
-            pend = self.pending[op]
-            room = np.maximum(p.max_rpc_queue - self.queue_rpcs[op], 0.0)
-            n_full = np.minimum(np.floor(pend / win_bytes), room)
-            full_bytes = n_full * win_bytes
-            self.queue_rpcs[op] += n_full
-            self.queue_bytes[op] += full_bytes
-            pend = pend - full_bytes
-            self.hold_age[op] = np.where(pend > 0, self.hold_age[op] + dt, 0.0)
-            expire = (pend > 0) & (self.hold_age[op] >= p.hold_time(op)) & (room > n_full)
-            self.queue_rpcs[op] += expire
-            self.queue_bytes[op] += np.where(expire, pend, 0.0)
-            self.ctr_partial_rpcs[op] += expire
-            self.pending[op] = np.where(expire, 0.0, pend)
-            self.hold_age[op] = np.where(expire, 0.0, self.hold_age[op])
-
-        # (3) dispatch up to rpcs_in_flight (reads first: sync-read bias)
-        slots = np.maximum(
-            self.rpcs_in_flight - (self.active_rpcs[READ] + self.active_rpcs[WRITE]),
-            0.0,
-        )
-        for op in (READ, WRITE):
-            take = np.minimum(self.queue_rpcs[op], slots)
-            frac = np.divide(take, self.queue_rpcs[op],
-                             out=np.zeros_like(take), where=self.queue_rpcs[op] > 0)
-            bytes_out = self.queue_bytes[op] * frac
-            self.queue_rpcs[op] -= take
-            self.queue_bytes[op] -= bytes_out
-            slots = slots - take
-            self.active_rpcs[op] += take
-            per_rpc = p.setup_time(self.randomness[op]) + p.rtt
-            self.setup_work[op] += take * per_rpc
-            self.unready_bytes[op] += bytes_out
-            tot_bytes = self.unready_bytes[op] + self.ready_bytes[op]
-            self.active_avg_size[op] = np.where(
-                self.active_rpcs[op] > 0,
-                tot_bytes / np.maximum(self.active_rpcs[op], 1e-9),
-                self.active_avg_size[op])
-            self.ctr_rpcs_sent[op] += take
-            self.ctr_rpc_bytes[op] += bytes_out
-            self.dispatch_time_num[op] += take * self.now
-
-        # (4) OST setup service: `ost_setup_parallel` concurrent contexts
-        # drain setup work; a separate IOPS ceiling caps completed setups.
-        total_work = self.setup_work[READ] + self.setup_work[WRITE]
-        ost_work = np.bincount(self.osc_ost, weights=total_work, minlength=self.n_osts)
-        cap = dt * p.ost_setup_parallel
-        drain_frac_ost = np.divide(cap, ost_work,
-                                   out=np.ones(self.n_osts), where=ost_work > cap)
-        # IOPS ceiling, applied on setups completed this tick per OST
-        for op in (READ, WRITE):
-            work = self.setup_work[op]
-            drained = work * drain_frac_ost[self.osc_ost]
-            per_rpc = p.setup_time(self.randomness[op]) + p.rtt
-            setups_done = np.divide(drained, per_rpc,
-                                    out=np.zeros_like(drained), where=per_rpc > 0)
-            ost_setups = np.bincount(self.osc_ost, weights=setups_done,
-                                     minlength=self.n_osts)
-            iops_cap = p.ost_iops * dt
-            iops_frac = np.divide(iops_cap, ost_setups, out=np.ones(self.n_osts),
-                                  where=ost_setups > iops_cap)
-            effective = drained * iops_frac[self.osc_ost]
-            self.setup_work[op] = work - effective
-            ready = np.minimum(
-                np.divide(effective, per_rpc, out=np.zeros_like(effective),
-                          where=per_rpc > 0) * self.active_avg_size[op],
-                self.unready_bytes[op])
-            ready = np.where(self.setup_work[op] <= 1e-12, self.unready_bytes[op], ready)
-            self.unready_bytes[op] -= ready
-            self.ready_bytes[op] += ready
-
-        # (5) bandwidth: OST bw fair-shared over transfer-phase RPC counts,
-        # then per-client NIC cap rescales.  An OST whose service queue
-        # holds far more bytes than its buffer comfort zone degrades
-        # (cache thrash / request-queue overhead) -- this is the cost of
-        # everyone maxing rpcs_in_flight x window at once, and the reason
-        # decentralized agents must moderate under contention.
-        want = self.ready_bytes[READ] + self.ready_bytes[WRITE]
-        queued = (self.unready_bytes[READ] + self.unready_bytes[WRITE]
-                  + self.ready_bytes[READ] + self.ready_bytes[WRITE])
-        ost_queued = np.bincount(self.osc_ost, weights=queued, minlength=self.n_osts)
-        over = ost_queued > p.ost_buffer_bytes
-        eff = np.where(
-            over,
-            np.power(p.ost_buffer_bytes / np.maximum(ost_queued, 1.0),
-                     p.congestion_exp),
-            1.0,
-        )
-        active_transfer = np.where(want > 0,
-                                   self.active_rpcs[READ] + self.active_rpcs[WRITE], 0.0)
-        ost_shares = np.bincount(self.osc_ost, weights=active_transfer,
-                                 minlength=self.n_osts)
-        share = np.divide(active_transfer, ost_shares[self.osc_ost],
-                          out=np.zeros_like(active_transfer),
-                          where=ost_shares[self.osc_ost] > 0)
-        ost_bw_eff = p.ost_bandwidth * eff
-        alloc = np.minimum(share * ost_bw_eff[self.osc_ost] * dt, want)
-        # redistribute leftover OST bandwidth to still-hungry OSCs
-        leftover = ost_bw_eff * dt - np.bincount(
-            self.osc_ost, weights=alloc, minlength=self.n_osts)
-        hungry = want - alloc
-        ost_hungry = np.bincount(self.osc_ost, weights=hungry, minlength=self.n_osts)
-        bonus_frac = np.divide(leftover, ost_hungry, out=np.zeros(self.n_osts),
-                               where=ost_hungry > 0)
-        alloc = alloc + hungry * np.minimum(bonus_frac[self.osc_ost], 1.0)
-        # NIC cap per client
-        client_alloc = np.bincount(self.osc_client, weights=alloc,
-                                   minlength=self.n_clients)
-        nic_frac = np.divide(p.nic_bandwidth * dt, client_alloc,
-                             out=np.ones(self.n_clients),
-                             where=client_alloc > p.nic_bandwidth * dt)
-        alloc = alloc * nic_frac[self.osc_client]
-
-        # (6) completions
-        for op in (READ, WRITE):
-            frac = np.divide(self.ready_bytes[op], want,
-                             out=np.zeros_like(want), where=want > 0)
-            drained = alloc * frac
-            self.ready_bytes[op] -= drained
-            avg = np.maximum(self.active_avg_size[op], 1.0)
-            done_rpcs = np.minimum(np.divide(drained, avg), self.active_rpcs[op])
-            inflight_bytes = self.unready_bytes[op] + self.ready_bytes[op]
-            done_rpcs = np.where(inflight_bytes <= 1e-9, self.active_rpcs[op], done_rpcs)
-            prev_active = self.active_rpcs[op].copy()
-            self.active_rpcs[op] -= done_rpcs
-            self.ctr_rpcs_done[op] += done_rpcs
-            if op == READ:
-                self.ctr_bytes_done[READ] += drained
-            else:
-                # flushed bytes leave the dirty cache and release grant
-                self.dirty_bytes = np.maximum(self.dirty_bytes - drained, 0.0)
-                self.grant_used = np.maximum(self.grant_used - drained, 0.0)
-            avg_disp = np.divide(self.dispatch_time_num[op], np.maximum(prev_active, 1e-9))
-            lat = np.maximum(self.now + dt - avg_disp, dt)
-            self.ctr_latency_sum[op] += done_rpcs * lat
-            keep = np.divide(self.active_rpcs[op], np.maximum(prev_active, 1e-9))
-            self.dispatch_time_num[op] *= keep
-
-        # blocked-writer accounting (workloads stop issuing while blocked)
-        self.ctr_block_time += self.write_blocked * dt
-        room = np.minimum(p.max_dirty_bytes - self.dirty_bytes,
-                          p.grant_bytes - self.grant_used)
-        self.write_blocked &= room < PAGE_SIZE
-
-        # time-integrals for interval averages
-        for op in (READ, WRITE):
-            self.ctr_pending_integral[op] += (self.pending[op] + self.queue_bytes[op]) * dt
-            self.ctr_active_integral[op] += self.active_rpcs[op] * dt
-        self.ctr_dirty_integral += self.dirty_bytes * dt
-        self.ctr_grant_integral += self.grant_used * dt
-
-        self.now += dt
-        self.tick_index += 1
+            w.tick(self, self.params.tick)
+        # … then the pure core advances every other phase
+        self.state = engine_step(self.params, self.topo, self.state, None)
 
     def run(self, seconds: float) -> None:
         n = int(round(seconds / self.params.tick))
