@@ -11,3 +11,7 @@ verify:
 
 bench-fleet:
 	PYTHONPATH=src $(PY) benchmarks/fleet_scaling.py --quick
+
+# CI-sized scenario-catalog sweep (writes reports/lab/report.{json,md})
+lab-smoke:
+	PYTHONPATH=src $(PY) -m repro.lab evaluate --smoke

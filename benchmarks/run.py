@@ -11,6 +11,7 @@ import time
 def main() -> None:
     import benchmarks.fig3_dlio as fig3
     import benchmarks.fleet_scaling as fleet
+    import benchmarks.lab_scaling as labsc
     import benchmarks.sim_scaling as simsc
     import benchmarks.table2_h5bench as t2
     import benchmarks.table3_overhead as t3
@@ -52,6 +53,14 @@ def main() -> None:
           f"loop_tps={rs['loop_ticks_per_s']:.0f};"
           f"fused_tps={rs['fused_ticks_per_s']:.0f};"
           f"speedup={rs['speedup']:.1f}x")
+
+    t0 = time.time()
+    rl = labsc.bench(32)
+    el = (time.time() - t0) * 1e6
+    print(f"lab_scaling,{el:.0f},"
+          f"seq_sim_s_per_s={rl['seq_scenario_s_per_s']:.1f};"
+          f"batch_sim_s_per_s={rl['batch_scenario_s_per_s']:.1f};"
+          f"speedup={rl['speedup']:.1f}x")
 
     print("\n--- Table II detail ---")
     for r in rows2:

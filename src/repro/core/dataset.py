@@ -73,21 +73,26 @@ def collect(cfg: CollectConfig = CollectConfig(),
     for rep in range(cfg.reps):
         cells = _cells()
         n = len(cells)
+        n_noise = 4 if cfg.include_contention else 0
         # one isolated OST per cell; optional contention cells share OSTs
-        sim = PFSSim(n_clients=n, n_osts=n, seed=cfg.seed * 1000 + rep)
+        sim = PFSSim(n_clients=n + n_noise, n_osts=n,
+                     seed=cfg.seed * 1000 + rep)
         for i, cell in enumerate(cells):
             wl = Workload(client=i, op=cell["op"], req_size=cell["req_size"],
                           randomness=cell["randomness"],
                           n_threads=cell["n_threads"], osts=(i,),
                           name=f"cell{i}")
             sim.attach(wl)
-        if cfg.include_contention:
-            # extra clients pile onto the first few OSTs (congested cells)
-            for j in range(4):
-                wl = Workload(client=j, op=READ, req_size=1 * 2**20,
-                              randomness=0.3, n_threads=4,
-                              osts=((j + 1) % n,), name=f"noise{j}")
-                sim.attach(wl)
+        # extra clients pile onto the first few OSTs (congested cells).
+        # Noise traffic rides on *fresh* client ids so it shares only the
+        # cell's OST — never the measurement OSC itself (sharing an OSC
+        # would pollute the probed counters instead of modeling
+        # independent background contention).
+        for j in range(n_noise):
+            wl = Workload(client=n + j, op=READ, req_size=1 * 2**20,
+                          randomness=0.3, n_threads=4,
+                          osts=((j + 1) % n,), name=f"noise{j}")
+            sim.attach(wl)
 
         oscs = [sim.osc_id(i, i) for i in range(n)]
         prev = {o: probe(sim, o) for o in oscs}

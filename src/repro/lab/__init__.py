@@ -1,0 +1,56 @@
+"""Scenario Lab: batched multi-scenario simulation and the fleet-scale
+collect → train → evaluate pipeline.
+
+The DIAL paper argues that decentralized agents trained purely on local
+metrics react well to *global* conditions — contention, stragglers,
+shifting workload mixes.  Exercising that claim needs many scenarios,
+not one hand-built simulator per Python process.  This package turns the
+PR-2 pure-pytree engine into a scenario machine:
+
+    scenarios.py   declarative :class:`ScenarioSpec` (topology, workload
+                   mix, disturbance schedule, seed) + a registry of named
+                   scenarios — the paper setups (vpic / bdcats / dlio /
+                   filebench) and beyond-paper ones (noisy neighbours,
+                   degraded / failing OSTs, bursty arrivals,
+                   heterogeneous client links);
+    batch.py       stack N structurally-identical scenarios into one
+                   batched pytree and ``vmap`` the fused interval scan —
+                   hundreds of independent scenarios/seeds per jitted
+                   launch, with in-batch DIAL tuning through the existing
+                   batched forest scorer;
+    campaign.py    offline data collection rebuilt on the batch path:
+                   explore θ′ across the whole cell batch, train the
+                   read/write GBDTs, save versioned model artifacts
+                   (``core/dataset.collect`` stays the sequential oracle);
+    evaluate.py    run every registered scenario under tuned vs default
+                   vs best-static policies and emit a JSON + markdown
+                   report (Table II / Fig. 3 analogs).
+
+CLI:  ``python -m repro.lab {list,evaluate,campaign}`` (``--smoke`` for
+the CI-sized sweep).  Disturbances are per-tick exogenous schedules
+(:class:`repro.pfs.state.Disturbance`) consumed identically by the numpy
+oracle and the JAX scan, so every lab run stays equivalence-testable.
+"""
+
+from repro.lab.scenarios import (SCENARIOS, BuiltScenario, DisturbanceEvent,
+                                 ScenarioSpec, build, get_scenario,
+                                 make_schedule, scenario_names, variants)
+
+# The declarative scenario layer is pure numpy; the batch executor needs
+# jax.  Keep the package importable (catalog listing, numpy-oracle runs)
+# on jax-free installs by resolving the batch exports lazily (PEP 562).
+_BATCH_EXPORTS = ("ScenarioBatch", "BatchEngine", "BatchPort",
+                  "stack_scenarios", "run_batch")
+
+__all__ = [
+    "ScenarioSpec", "DisturbanceEvent", "BuiltScenario", "SCENARIOS",
+    "build", "get_scenario", "scenario_names", "variants", "make_schedule",
+    *_BATCH_EXPORTS,
+]
+
+
+def __getattr__(name):
+    if name in _BATCH_EXPORTS:
+        from repro.lab import batch as _batch
+        return getattr(_batch, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

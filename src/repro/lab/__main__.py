@@ -1,0 +1,105 @@
+"""Scenario Lab CLI.
+
+    python -m repro.lab list
+    python -m repro.lab evaluate [--smoke] [--scenarios A B ...]
+                                 [--model PREFIX] [--out reports/lab]
+    python -m repro.lab campaign [--smoke] [--out models/lab]
+
+``evaluate`` runs every registered scenario (or the named subset) under
+every static θ plus DIAL and writes ``report.json`` / ``report.md``;
+``campaign`` runs batched offline collection + training and saves a
+versioned model artifact.  ``--smoke`` shrinks both to CI size.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def _cmd_list(args) -> None:
+    from repro.lab.scenarios import SCENARIOS
+
+    w = max(len(n) for n in SCENARIOS)
+    for name, spec in SCENARIOS.items():
+        tags = ",".join(spec.tags)
+        print(f"{name:<{w}}  {spec.n_clients}c x {spec.n_osts}ost  "
+              f"[{tags}]  {spec.description}")
+
+
+def _cmd_evaluate(args) -> None:
+    from repro.core.model import DIALModel
+    from repro.lab.evaluate import default_model, evaluate, write_report
+
+    model = (DIALModel.load(args.model) if args.model
+             else default_model(smoke=args.smoke, root=args.models_root))
+    seconds = 3.0 if args.smoke else args.seconds
+    report = evaluate(names=args.scenarios or None, model=model,
+                      seconds=seconds, interval=args.interval,
+                      seg_backend=args.seg_backend)
+    jpath, mpath = write_report(report, args.out)
+    s = report["summary"]
+    print(f"{s['n_scenarios']} scenarios -> {jpath} / {mpath}")
+    print(f"mean DIAL vs default {s['mean_dial_vs_default']:.2f}x, "
+          f"mean frac of best static "
+          f"{100 * s['mean_dial_frac_of_best_static']:.1f}%")
+
+
+def _cmd_campaign(args) -> None:
+    import dataclasses
+
+    from repro.lab.campaign import CampaignConfig, run_campaign, smoke_campaign
+
+    if args.smoke:
+        cfg, gbdt = smoke_campaign()
+        cfg = dataclasses.replace(cfg, contention_frac=args.contention_frac,
+                                  seed=args.seed)
+    else:
+        cfg = CampaignConfig(seconds=args.seconds, reps=args.reps,
+                             contention_frac=args.contention_frac,
+                             seed=args.seed)
+        gbdt = None
+    d, _, info = run_campaign(cfg, out_root=args.out, gbdt_params=gbdt,
+                              smoke=args.smoke)
+    print(f"saved {d}: {info['samples']} samples, "
+          f"positive rates {info['positive_rate']}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(prog="python -m repro.lab",
+                                 description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    sub.add_parser("list", help="print the scenario catalog")
+
+    ev = sub.add_parser("evaluate", help="tuned vs default vs best-static "
+                                         "sweep over the catalog")
+    ev.add_argument("--scenarios", nargs="*", default=None)
+    ev.add_argument("--model", default=None,
+                    help="DIALModel prefix (default: latest campaign "
+                         "artifact under --models-root, else models/dial, "
+                         "else a fresh campaign)")
+    ev.add_argument("--models-root", default="models/lab",
+                    help="campaign artifact root to resolve models from")
+    ev.add_argument("--seconds", type=float, default=10.0)
+    ev.add_argument("--interval", type=float, default=0.5)
+    ev.add_argument("--seg-backend", default="jax")
+    ev.add_argument("--out", default="reports/lab")
+    ev.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (3 s per scenario, smoke model)")
+
+    cp = sub.add_parser("campaign", help="batched collect -> train -> "
+                                         "versioned artifact")
+    cp.add_argument("--seconds", type=float, default=60.0)
+    cp.add_argument("--reps", type=int, default=2)
+    cp.add_argument("--contention-frac", type=float, default=0.25)
+    cp.add_argument("--seed", type=int, default=0)
+    cp.add_argument("--out", default="models/lab")
+    cp.add_argument("--smoke", action="store_true")
+
+    args = ap.parse_args(argv)
+    {"list": _cmd_list, "evaluate": _cmd_evaluate,
+     "campaign": _cmd_campaign}[args.cmd](args)
+
+
+if __name__ == "__main__":
+    main()

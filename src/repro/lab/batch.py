@@ -1,0 +1,257 @@
+"""Batched scenario execution: N scenarios per jitted launch.
+
+The fused interval scan (:mod:`repro.pfs.engine_jax`) removed the
+per-tick Python round trip; this module removes the per-*scenario*
+process.  ``stack_scenarios`` stacks B structurally-identical
+:class:`~repro.lab.scenarios.BuiltScenario` pytrees (same topology
+dimensions, same workload-table shapes — e.g. variants/seeds of one
+spec, or a grid of homogeneous campaign cells) along a new leading batch
+axis, and :class:`BatchEngine` ``vmap``-s the identical
+``demand_step ∘ engine_step`` interval over that axis — hundreds of
+independent scenarios advance one tuning interval in a single device
+dispatch.
+
+In-batch DIAL tuning reuses the fleet machinery unchanged: a batch of B
+scenarios with n interfaces each *is* a fleet of ``B * n`` interfaces
+(every row of every fleet matrix is already built purely from one
+interface's local counters), so :class:`BatchPort` exposes the stacked
+state through the :class:`~repro.core.fleet.FleetPort` protocol and one
+:class:`~repro.core.fleet.FleetAgent` tunes every scenario in the batch
+with one forest launch per interval.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from repro.core.fleet import FleetAgent
+from repro.core.tuner import TunerParams
+from repro.kernels.segment_reduce.ops import make_segment_sum
+from repro.lab.scenarios import BuiltScenario, make_schedule
+from repro.pfs.engine_jax import engine_step_jax
+from repro.pfs.state import Disturbance, SimParams, SimState, SimTopo
+from repro.pfs.stats import FleetStats
+from repro.pfs.workloads import WorkloadState, WorkloadTable
+
+
+def _tree_stack(trees):
+    """Stack a list of identical-structure pytrees along a new axis 0."""
+    return jax.tree.map(lambda *xs: np.stack([np.asarray(x) for x in xs]),
+                        *trees)
+
+
+@dataclasses.dataclass
+class ScenarioBatch:
+    """B stacked scenarios: one pytree per engine-level piece.
+
+    ``table`` / ``state`` / ``wstate`` arrays carry a leading ``(B, ...)``
+    batch axis; ``specs`` keeps the per-element provenance (used to
+    rebuild each element's disturbance schedule every interval).
+    """
+
+    params: SimParams
+    topo: SimTopo
+    table: WorkloadTable        # batched arrays
+    state: SimState             # batched arrays
+    wstate: WorkloadState       # batched arrays
+    specs: tuple = ()           # per-element ScenarioSpec (may be empty)
+
+    def __len__(self) -> int:
+        return int(np.asarray(self.state.window_pages).shape[0])
+
+    @property
+    def n_osc(self) -> int:
+        return self.topo.n_osc
+
+    def schedule(self, t0_tick: int, n_ticks: int) -> Disturbance:
+        """Stacked ``(B, n_ticks, ...)`` disturbance schedule for one
+        interval (neutral for elements without events / without specs)."""
+        if self.specs:
+            per = [make_schedule(s.events, self.topo, self.params,
+                                 t0_tick, n_ticks) for s in self.specs]
+        else:
+            per = [Disturbance.neutral(self.topo, n_ticks=n_ticks)
+                   for _ in range(len(self))]
+        return _tree_stack(per)
+
+    # ------------------------------------------------------------------ #
+    def throughput(self, seconds: float) -> dict:
+        """Per-element aggregate MB/s from the cumulative counters."""
+        done = np.asarray(self.state.ctr_bytes_done)      # (B, 2, n)
+        read = done[:, 0].sum(axis=1) / seconds / 1e6
+        write = done[:, 1].sum(axis=1) / seconds / 1e6
+        return {"read_mbs": read, "write_mbs": write,
+                "total_mbs": read + write}
+
+
+def stack_scenarios(built: list[BuiltScenario]) -> ScenarioBatch:
+    """Stack structurally-identical built scenarios into one batch."""
+    if not built:
+        raise ValueError("empty scenario batch")
+    b0 = built[0]
+    for b in built[1:]:
+        if b.params != b0.params:
+            raise ValueError("batch elements must share SimParams "
+                             "(the engine closes over element 0's)")
+        if (b.topo.n_clients, b.topo.n_osts) != (b0.topo.n_clients,
+                                                 b0.topo.n_osts):
+            raise ValueError("batch elements must share topology dims")
+        if (len(b.table), b.table.n_waves,
+                len(b.table.entry_row)) != (len(b0.table), b0.table.n_waves,
+                                            len(b0.table.entry_row)):
+            raise ValueError("batch elements must share workload-table "
+                             "structure (rows, waves, stripe entries)")
+    return ScenarioBatch(
+        params=b0.params,
+        topo=b0.topo,
+        table=_tree_stack([b.table for b in built]),
+        state=_tree_stack([b.state for b in built]),
+        wstate=_tree_stack([b.wstate for b in built]),
+        specs=tuple(b.spec for b in built),
+    )
+
+
+# ---------------------------------------------------------------------- #
+# vmapped fused interval
+# ---------------------------------------------------------------------- #
+class BatchEngine:
+    """One tuning interval for the whole batch per jitted call.
+
+    ``vmap`` of the exact :class:`~repro.pfs.engine_jax.FusedEngine`
+    interval body over the batch axis (state, workload table, and
+    disturbance schedule all batched), jitted once per
+    (topology, table-structure, n_ticks) shape.  ``seg_backend``
+    defaults to the XLA ``segment_sum`` path, which vmaps cleanly on
+    every platform; the Pallas one-hot-matmul kernel remains available
+    for unbatched TPU intervals via :class:`FusedEngine`.
+    """
+
+    def __init__(self, params: SimParams, topo: SimTopo, n_ticks: int,
+                 seg_backend: str = "jax"):
+        self.params = params
+        self.topo = topo
+        self.n_ticks = int(n_ticks)
+        segsum = make_segment_sum(seg_backend)
+
+        def interval(table, state, wstate, sched):
+            def body(carry, dist):
+                st, ws = carry
+                demand, ws = table.demand_step(params, ws, st,
+                                               xp=jnp, segsum=segsum)
+                st = engine_step_jax(params, topo, st, demand, segsum,
+                                     disturbance=dist)
+                return (st, ws), None
+
+            (state, wstate), _ = jax.lax.scan(
+                body, (state, wstate), sched, length=self.n_ticks)
+            return state, wstate
+
+        self._run = jax.jit(jax.vmap(interval))
+
+    def run_interval(self, table: WorkloadTable, state: SimState,
+                     wstate: WorkloadState, sched: Disturbance):
+        """Advance every element one interval; numpy in, numpy out."""
+        with enable_x64():
+            args = jax.tree.map(jnp.asarray, (table, state, wstate, sched))
+            jstate, jws = self._run(*args)
+            jstate, jws = jax.tree.map(
+                lambda x: x.block_until_ready()
+                if hasattr(x, "block_until_ready") else x, (jstate, jws))
+        return jax.tree.map(np.array, jstate), jax.tree.map(np.array, jws)
+
+
+# ---------------------------------------------------------------------- #
+# in-batch DIAL tuning: the batch as one fleet
+# ---------------------------------------------------------------------- #
+class BatchPort:
+    """:class:`~repro.core.fleet.FleetPort` over a stacked batch.
+
+    Interface ``(b, osc)`` of the batch is fleet column ``b * n + osc``.
+    ``cols`` restricts the exposed interfaces (e.g. only the DIAL-policy
+    element of an evaluation batch, or only measurement cells of a
+    campaign); default is every interface of every element.
+    """
+
+    def __init__(self, batch: ScenarioBatch, cols=None):
+        self.batch = batch
+        n = batch.n_osc
+        if cols is None:
+            cols = np.arange(len(batch) * n, dtype=np.int64)
+        self._cols = np.asarray(cols, dtype=np.int64)
+
+    def osc_ids(self) -> np.ndarray:
+        return self._cols
+
+    def probe_all(self) -> FleetStats:
+        s = self.batch.state
+        c = self._cols
+
+        def f2(a):  # (B, 2, n) -> (2, len(cols))
+            return np.moveaxis(np.asarray(a), 1, 0).reshape(2, -1)[:, c].copy()
+
+        def f1(a):  # (B, n) -> (len(cols),)
+            return np.asarray(a).reshape(-1)[c].copy()
+
+        return FleetStats(
+            t=float(np.ravel(np.asarray(s.now))[0]),
+            oscs=c,
+            bytes_done=f2(s.ctr_bytes_done),
+            rpcs_sent=f2(s.ctr_rpcs_sent),
+            rpc_bytes=f2(s.ctr_rpc_bytes),
+            partial_rpcs=f2(s.ctr_partial_rpcs),
+            latency_sum=f2(s.ctr_latency_sum),
+            rpcs_done=f2(s.ctr_rpcs_done),
+            req_count=f2(s.ctr_req_count),
+            req_bytes=f2(s.ctr_req_bytes),
+            pending_integral=f2(s.ctr_pending_integral),
+            active_integral=f2(s.ctr_active_integral),
+            cache_hit_bytes=f1(s.ctr_cache_hit_bytes),
+            block_time=f1(s.ctr_block_time),
+            dirty_integral=f1(s.ctr_dirty_integral),
+            grant_integral=f1(s.ctr_grant_integral),
+            randomness=f2(s.randomness),
+            window_pages=f1(s.window_pages).astype(np.int64),
+            rpcs_in_flight=f1(s.rpcs_in_flight).astype(np.int64),
+        )
+
+    def set_knobs_many(self, osc_ids, window_pages, rpcs_in_flight) -> None:
+        ids = np.atleast_1d(np.asarray(osc_ids, dtype=np.int64))
+        b, o = np.divmod(ids, self.batch.n_osc)
+        s = self.batch.state
+        s.window_pages[b, o] = np.asarray(window_pages, dtype=np.int64)
+        s.rpcs_in_flight[b, o] = np.asarray(rpcs_in_flight, dtype=np.int64)
+
+
+def run_batch(batch: ScenarioBatch, model=None, seconds: float = 10.0,
+              interval: float = 0.5, seg_backend: str = "jax",
+              tuner_params: TunerParams = TunerParams(),
+              tune_cols=None, engine: BatchEngine | None = None):
+    """Drive a whole batch for ``seconds``, optionally DIAL-tuning.
+
+    The batched counterpart of :func:`repro.core.fleet.run_fleet`: every
+    interval is one vmapped engine launch followed (when ``model`` is
+    given) by one fleet tuning tick over ``tune_cols`` (default: every
+    interface of every element).  Returns the :class:`FleetAgent` (or
+    ``None`` when untuned); final state lives on ``batch.state``.
+    """
+    steps = max(int(round(interval / batch.params.tick)), 1)
+    n_intervals = int(round(seconds / interval))
+    engine = engine or BatchEngine(batch.params, batch.topo, steps,
+                                   seg_backend=seg_backend)
+    fleet = None
+    if model is not None:
+        fleet = FleetAgent(BatchPort(batch, cols=tune_cols), model,
+                           tuner_params=tuner_params)
+    for i in range(n_intervals):
+        sched = batch.schedule(i * steps, steps)
+        batch.state, batch.wstate = engine.run_interval(
+            batch.table, batch.state, batch.wstate, sched)
+        if fleet is not None:
+            fleet.tick()
+    return fleet

@@ -1,0 +1,280 @@
+"""Offline data collection and training, rebuilt on the batch path.
+
+The paper's SIV-A recipe (reproduced sequentially in
+:func:`repro.core.dataset.collect`, which stays the oracle) probes a
+grid of filebench-style cells every 0.5 s while exploring random θ′ and
+labels each transition with ``1[tput_{t+1}/tput_t > 1 + ε]``.  The
+sequential version steps one big mostly-idle simulator tick-by-tick from
+Python; a campaign instead builds one tiny *scenario per cell* — 2
+clients × 1 OST: a measurement stream plus an optional noisy-neighbour
+stream on its own client — stacks the whole grid into a
+:class:`~repro.lab.batch.ScenarioBatch`, and advances every cell's
+interval in a single vmapped launch.  Exploration, labeling, and feature
+assembly then run as array programs over the batch (the same
+``fleet_feature_matrix`` the fleet agent uses at inference time).
+
+Campaigns end in **versioned model artifacts**: ``models/lab/vNNN/``
+holding the two forests (``dial.read.npz`` / ``dial.write.npz``), a
+``manifest.json`` (config, sample counts, label rates), and a ``LATEST``
+pointer — anything :meth:`DIALModel.load` (and therefore ``run_fleet``)
+can consume directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+import os
+import re
+
+import numpy as np
+
+from repro.core.config_space import SPACE, ConfigSpace
+from repro.core.dataset import EPS_IMPROVE, train_models
+from repro.core.gbdt import GBDTParams
+from repro.core.metrics import (feature_dim, fleet_feature_matrix,
+                                snapshot_all)
+from repro.core.model import DIALModel
+from repro.lab.batch import BatchEngine, BatchPort, stack_scenarios
+from repro.lab.scenarios import ScenarioSpec, build
+from repro.pfs.engine import READ, WRITE
+from repro.pfs.workloads import Workload
+
+
+@dataclasses.dataclass(frozen=True)
+class CellGrid:
+    """The measurement-cell grid (paper: single streams, seq/rand ×
+    8K/1M/16M; thread counts extend the concurrency axis as in
+    ``core/dataset``)."""
+
+    req_sizes: tuple = (8 * 1024, 64 * 1024, 1 * 2**20, 16 * 2**20)
+    patterns: tuple = (0.0, 0.9, 1.0)
+    threads: tuple = (1, 4, 16, 32)
+
+
+SMOKE_GRID = CellGrid(req_sizes=(64 * 1024, 4 * 2**20),
+                      patterns=(0.0, 1.0), threads=(1, 8))
+
+
+def smoke_campaign() -> tuple["CampaignConfig", GBDTParams]:
+    """The one CI-sized campaign every smoke entry point shares (the
+    CLI's ``campaign --smoke`` and ``evaluate``'s auto-trained fallback
+    must stay the same model grade)."""
+    return (CampaignConfig(seconds=15.0, reps=1, grid=SMOKE_GRID),
+            GBDTParams(n_trees=40, max_depth=5))
+
+
+@dataclasses.dataclass
+class CampaignConfig:
+    seconds: float = 60.0
+    interval: float = 0.5
+    reps: int = 2                      # grid replicas (exploration diversity)
+    k: int = 1
+    min_volume_bytes: float = 64 * 1024
+    contention_frac: float = 0.25      # cells that get a live noisy neighbour
+    noise_rate: float = 1.2e9          # neighbour per-thread issue rate [B/s]
+    seed: int = 0
+    grid: CellGrid = dataclasses.field(default_factory=CellGrid)
+
+
+def _cell_specs(cfg: CampaignConfig):
+    """One 2-client × 1-OST ScenarioSpec per (cell, rep); returns the
+    specs plus the per-element op codes.
+
+    Every element has the same structure (2 workload rows, 1 stripe
+    entry each, disjoint clients → single wave), so the whole grid
+    stacks into one batch.  The neighbour row rides on its *own* client
+    (fresh id — cf. the `core/dataset.collect` contention fix) and is
+    disabled by ``thread_rate=0`` in uncontended cells.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    cells = list(itertools.product((READ, WRITE), cfg.grid.patterns,
+                                   cfg.grid.req_sizes, cfg.grid.threads))
+    specs, ops = [], []
+    for rep in range(cfg.reps):
+        for i, (op, rnd, req, thr) in enumerate(cells):
+            noisy = rng.random() < cfg.contention_frac
+            measure = Workload(client=0, op=op, req_size=float(req),
+                               randomness=float(rnd), n_threads=int(thr),
+                               osts=(0,), name=f"cell{i}")
+            noise = Workload(client=1, op=READ, req_size=1 * 2**20,
+                             randomness=0.3, n_threads=4, osts=(0,),
+                             thread_rate=cfg.noise_rate if noisy else 0.0,
+                             name="noise")
+            specs.append(ScenarioSpec(
+                name=f"campaign_cell{i}_rep{rep}", n_clients=2, n_osts=1,
+                workloads=(measure, noise), seed=cfg.seed * 1000 + rep))
+            ops.append(op)
+    return specs, np.asarray(ops, dtype=np.int64)
+
+
+def collect_batch(cfg: CampaignConfig = CampaignConfig(),
+                  space: ConfigSpace = SPACE) -> dict:
+    """The collection sweep on the batch path.
+
+    Same explore/label alternation as :func:`repro.core.dataset.collect`
+    — observe H_t under the held θ, apply a random θ′, label one
+    interval later — but every per-cell step is one masked array op over
+    the whole batch and every interval is one vmapped engine launch.
+    Returns ``{'read': (X, y), 'write': (X, y)}``.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    specs, ops = _cell_specs(cfg)
+    batch = stack_scenarios([build(s) for s in specs])
+    n_cells = len(batch)
+    # measurement interface = (client 0, OST 0) = local OSC 0 per element
+    cols = np.arange(n_cells, dtype=np.int64) * batch.n_osc
+    port = BatchPort(batch, cols=cols)
+
+    steps = max(int(round(cfg.interval / batch.params.tick)), 1)
+    n_intervals = int(round(cfg.seconds / cfg.interval))
+    engine = BatchEngine(batch.params, batch.topo, steps)
+
+    theta_feats = space.as_features()
+    configs = space.configs()
+    m = len(configs)
+    is_read = ops == READ
+
+    prev = port.probe_all()
+    hist: list = []
+    pend_active = np.zeros(n_cells, dtype=bool)
+    pend_tput = np.zeros(n_cells)
+    pend_feats = {READ: np.zeros((n_cells, feature_dim(READ, cfg.k)),
+                                 dtype=np.float32),
+                  WRITE: np.zeros((n_cells, feature_dim(WRITE, cfg.k)),
+                                  dtype=np.float32)}
+    Xs = {READ: [], WRITE: []}
+    ys = {READ: [], WRITE: []}
+
+    for it in range(n_intervals):
+        sched = batch.schedule(it * steps, steps)
+        batch.state, batch.wstate = engine.run_interval(
+            batch.table, batch.state, batch.wstate, sched)
+        cur = port.probe_all()
+        snap = snapshot_all(prev, cur)
+        prev = cur
+        hist.append(snap)
+        hist = hist[-(cfg.k + 1):]
+
+        vol = np.where(is_read, snap.read_volume, snap.write_volume)
+        tput = np.where(is_read, snap.read[:, 0], snap.write[:, 0])
+
+        # finalize last interval's exploration with this interval's label
+        was_pending = pend_active.copy()
+        label_ok = was_pending & (pend_tput > 0) & (vol >= cfg.min_volume_bytes)
+        for op in (READ, WRITE):
+            sel = label_ok & (ops == op)
+            if sel.any():
+                Xs[op].append(pend_feats[op][sel].copy())
+                ys[op].append((tput[sel] / pend_tput[sel]
+                               > 1.0 + EPS_IMPROVE).astype(float))
+        pend_active[:] = False
+
+        # explore on alternating intervals (cells that just labeled rest
+        # one interval so H_t reflects a steady state under the new θ)
+        if len(hist) < cfg.k + 1:
+            continue
+        ready = (~was_pending) & (vol >= cfg.min_volume_bytes)
+        rows = np.nonzero(ready)[0]
+        if rows.size == 0:
+            continue
+        j = rng.integers(m, size=rows.size)
+        for op in (READ, WRITE):
+            sel = ops[rows] == op
+            r_op = rows[sel]
+            if r_op.size == 0:
+                continue
+            F = fleet_feature_matrix(hist, op, r_op, theta_feats)
+            pend_feats[op][r_op] = F[np.arange(r_op.size) * m + j[sel]]
+        theta = np.asarray([configs[x] for x in j], dtype=np.int64)
+        port.set_knobs_many(cols[rows], theta[:, 0], theta[:, 1])
+        pend_tput[rows] = tput[rows]
+        pend_active[rows] = True
+
+    def _cat(op):
+        if not Xs[op]:
+            dim = feature_dim(op, cfg.k)
+            return (np.zeros((0, dim), dtype=np.float32), np.zeros(0))
+        return (np.concatenate(Xs[op]).astype(np.float32),
+                np.concatenate(ys[op]))
+
+    return {"read": _cat(READ), "write": _cat(WRITE)}
+
+
+# ---------------------------------------------------------------------- #
+# versioned model artifacts
+# ---------------------------------------------------------------------- #
+_VERSION_RE = re.compile(r"^v(\d{3,})$")
+
+
+def latest_version(root: str) -> str | None:
+    """Resolve the newest ``vNNN`` directory under ``root`` (the LATEST
+    pointer when present, else the highest version on disk)."""
+    pointer = os.path.join(root, "LATEST")
+    if os.path.exists(pointer):
+        with open(pointer) as f:
+            v = f.read().strip()
+        if os.path.isdir(os.path.join(root, v)):
+            return v
+    if not os.path.isdir(root):
+        return None
+    versions = sorted((v for v in os.listdir(root) if _VERSION_RE.match(v)),
+                      key=lambda v: int(_VERSION_RE.match(v).group(1)))
+    return versions[-1] if versions else None
+
+
+def save_versioned(model: DIALModel, root: str = "models/lab",
+                   meta: dict | None = None) -> str:
+    """Persist a campaign's model as the next ``models/lab/vNNN/``.
+
+    Layout: ``dial.read.npz`` / ``dial.write.npz`` (the standard
+    :meth:`DIALModel.save` prefix layout, so ``DIALModel.load(dir +
+    "/dial")`` — and therefore ``run_fleet`` — consumes it directly),
+    plus ``manifest.json`` and an updated ``LATEST`` pointer.
+    """
+    os.makedirs(root, exist_ok=True)
+    prev = latest_version(root)
+    nxt = "v%03d" % ((int(_VERSION_RE.match(prev).group(1)) + 1)
+                     if prev else 1)
+    d = os.path.join(root, nxt)
+    os.makedirs(d)
+    model.save(os.path.join(d, "dial"))
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump({"version": nxt, **(meta or {})}, f, indent=2,
+                  default=str)
+    with open(os.path.join(root, "LATEST"), "w") as f:
+        f.write(nxt + "\n")
+    return d
+
+
+def load_versioned(root: str = "models/lab", version: str | None = None,
+                   backend: str = "numpy") -> DIALModel:
+    v = version or latest_version(root)
+    if v is None:
+        raise FileNotFoundError(f"no campaign artifacts under {root!r}")
+    return DIALModel.load(os.path.join(root, v, "dial"), backend=backend)
+
+
+def run_campaign(cfg: CampaignConfig = CampaignConfig(),
+                 out_root: str = "models/lab",
+                 gbdt_params: GBDTParams | None = None,
+                 smoke: bool = False):
+    """collect → train → save one versioned artifact.
+
+    ``smoke`` marks the manifest so quality-sensitive consumers
+    (:func:`repro.lab.evaluate.default_model`) can refuse to silently
+    inherit a CI-sized model.  Returns ``(artifact_dir, model, info)``.
+    """
+    data = collect_batch(cfg)
+    info = {
+        "smoke": bool(smoke),
+        "config": dataclasses.asdict(cfg),
+        "samples": {op: int(len(data[op][0])) for op in ("read", "write")},
+        "positive_rate": {op: (float(data[op][1].mean())
+                               if len(data[op][1]) else 0.0)
+                          for op in ("read", "write")},
+    }
+    model = train_models(data, gbdt_params)
+    d = save_versioned(model, out_root, meta=info)
+    return d, model, info

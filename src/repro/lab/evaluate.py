@@ -1,0 +1,210 @@
+"""Catalog evaluation: tuned vs default vs best-static, per scenario.
+
+For every registered scenario this runs a single batch of
+``|Θ| + 1`` elements — one frozen element per static configuration
+(the Lustre default ``(256, 8)`` is row ``SPACE.index_of(DEFAULT)``)
+plus one DIAL-tuned element — through the vmapped engine, so the whole
+policy comparison for a scenario is one compiled launch per interval.
+The static sweep *is* the "best static" oracle the paper compares
+against in Table II; the DIAL element reuses the production
+:class:`~repro.core.fleet.FleetAgent` restricted to its own columns.
+
+Output is a JSON report plus a markdown table (Table II / Fig. 3
+analogs over the whole catalog), written by :func:`write_report` and
+the ``python -m repro.lab evaluate`` CLI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from repro.core.config_space import DEFAULT, SPACE
+from repro.core.model import DIALModel
+from repro.core.tuner import TunerParams
+from repro.lab.batch import BatchEngine, run_batch, stack_scenarios
+from repro.lab.scenarios import SCENARIOS, ScenarioSpec, build, get_scenario
+
+
+@dataclasses.dataclass
+class ScenarioResult:
+    """One scenario's policy comparison (MB/s aggregated over the run)."""
+
+    scenario: str
+    tags: tuple
+    n_clients: int
+    n_osts: int
+    default_mbs: float
+    initial_mbs: float                # static θ₀ (what DIAL started from)
+    best_static_mbs: float
+    best_static_theta: tuple
+    dial_mbs: float
+    dial_vs_default: float
+    dial_vs_initial: float            # the recovery story
+    dial_frac_of_best_static: float
+    changes: int                      # knob changes DIAL applied
+
+    def row(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["tags"] = list(self.tags)
+        d["best_static_theta"] = list(self.best_static_theta)
+        return d
+
+
+def evaluate_scenario(spec: ScenarioSpec, model: DIALModel,
+                      seconds: float = 10.0, interval: float = 0.5,
+                      seg_backend: str = "jax",
+                      tuner_params: TunerParams = TunerParams(),
+                      ) -> ScenarioResult:
+    """One scenario under every static θ plus DIAL, in one batch."""
+    configs = SPACE.configs()
+    m = len(configs)
+    built = []
+    for theta in configs + [spec.initial_theta]:
+        b = build(dataclasses.replace(spec, initial_theta=tuple(theta)))
+        built.append(b)
+    batch = stack_scenarios(built)
+    n = batch.n_osc
+    dial_cols = m * n + np.arange(n)       # last element is the tuned one
+    fleet = run_batch(batch, model=model, seconds=seconds,
+                      interval=interval, seg_backend=seg_backend,
+                      tuner_params=tuner_params, tune_cols=dial_cols)
+
+    tput = batch.throughput(seconds)["total_mbs"]
+    static = tput[:m]
+    best = int(np.argmax(static))
+    default_mbs = float(static[SPACE.index_of(DEFAULT)])
+    theta0 = (int(spec.initial_theta[0]), int(spec.initial_theta[1]))
+    initial_mbs = (float(static[SPACE.index_of(theta0)])
+                   if theta0 in configs else default_mbs)
+    dial_mbs = float(tput[m])
+    changes = sum(int(r.decisions.changed.sum()) for r in fleet.decisions)
+    return ScenarioResult(
+        scenario=spec.name,
+        tags=spec.tags,
+        n_clients=spec.n_clients,
+        n_osts=spec.n_osts,
+        default_mbs=default_mbs,
+        initial_mbs=initial_mbs,
+        best_static_mbs=float(static[best]),
+        best_static_theta=configs[best],
+        dial_mbs=dial_mbs,
+        dial_vs_default=dial_mbs / max(default_mbs, 1e-9),
+        dial_vs_initial=dial_mbs / max(initial_mbs, 1e-9),
+        dial_frac_of_best_static=dial_mbs / max(float(static[best]), 1e-9),
+        changes=changes,
+    )
+
+
+def evaluate(names=None, model: DIALModel | None = None,
+             seconds: float = 10.0, interval: float = 0.5,
+             seg_backend: str = "jax") -> dict:
+    """Run the catalog (default: every registered scenario) and return
+    the report dict (rows + summary)."""
+    if model is None:
+        model = default_model()
+    names = list(names) if names else list(SCENARIOS)
+    rows = []
+    for name in names:
+        res = evaluate_scenario(get_scenario(name), model,
+                                seconds=seconds, interval=interval,
+                                seg_backend=seg_backend)
+        rows.append(res.row())
+    speedups = [r["dial_vs_default"] for r in rows]
+    fracs = [r["dial_frac_of_best_static"] for r in rows]
+    return {
+        "seconds": seconds,
+        "interval": interval,
+        "scenarios": rows,
+        "summary": {
+            "n_scenarios": len(rows),
+            "mean_dial_vs_default": float(np.mean(speedups)),
+            "min_dial_vs_default": float(np.min(speedups)),
+            "mean_dial_frac_of_best_static": float(np.mean(fracs)),
+            "min_dial_frac_of_best_static": float(np.min(fracs)),
+        },
+    }
+
+
+def render_markdown(report: dict) -> str:
+    """The report as a markdown table (Table II analog over the catalog)."""
+    lines = [
+        "# Scenario Lab report",
+        "",
+        f"{report['summary']['n_scenarios']} scenarios, "
+        f"{report['seconds']:.0f} s each, tuning every "
+        f"{report['interval']} s.",
+        "",
+        "| scenario | default MB/s | θ₀ MB/s | best static MB/s (θ) | "
+        "DIAL MB/s | DIAL/default | DIAL/θ₀ | DIAL/best | changes |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in report["scenarios"]:
+        th = "×".join(str(int(x)) for x in r["best_static_theta"])
+        lines.append(
+            f"| {r['scenario']} | {r['default_mbs']:.1f} | "
+            f"{r['initial_mbs']:.1f} | "
+            f"{r['best_static_mbs']:.1f} ({th}) | {r['dial_mbs']:.1f} | "
+            f"{r['dial_vs_default']:.2f}x | {r['dial_vs_initial']:.2f}x | "
+            f"{100 * r['dial_frac_of_best_static']:.1f}% | "
+            f"{r['changes']} |")
+    s = report["summary"]
+    lines += [
+        "",
+        f"Mean DIAL vs default: **{s['mean_dial_vs_default']:.2f}x** "
+        f"(min {s['min_dial_vs_default']:.2f}x); mean fraction of best "
+        f"static: **{100 * s['mean_dial_frac_of_best_static']:.1f}%** "
+        f"(min {100 * s['min_dial_frac_of_best_static']:.1f}%).",
+        "",
+    ]
+    return "\n".join(lines)
+
+
+def write_report(report: dict, out_dir: str) -> tuple[str, str]:
+    os.makedirs(out_dir, exist_ok=True)
+    jpath = os.path.join(out_dir, "report.json")
+    mpath = os.path.join(out_dir, "report.md")
+    with open(jpath, "w") as f:
+        json.dump(report, f, indent=2)
+    with open(mpath, "w") as f:
+        f.write(render_markdown(report))
+    return jpath, mpath
+
+
+def default_model(smoke: bool = False,
+                  root: str = "models/lab") -> DIALModel:
+    """Best available model: campaign artifact under ``root`` → trained
+    ``models/dial`` prefix → a fresh campaign (which also leaves a
+    versioned artifact behind).
+
+    A non-smoke caller never silently inherits a smoke-grade campaign
+    artifact: versions whose manifest carries ``smoke: true`` are only
+    eligible when ``smoke`` is requested (pin one explicitly with
+    ``--model <root>/vNNN/dial`` to override).
+    """
+    from repro.lab.campaign import (CampaignConfig, latest_version,
+                                    load_versioned, run_campaign,
+                                    smoke_campaign)
+    v = latest_version(root)
+    if v is not None:
+        try:
+            with open(os.path.join(root, v, "manifest.json")) as f:
+                is_smoke = bool(json.load(f).get("smoke", False))
+        except (OSError, ValueError):
+            is_smoke = False
+        if smoke or not is_smoke:
+            return load_versioned(root, version=v)
+    try:
+        return DIALModel.load("models/dial")
+    except FileNotFoundError:
+        pass
+    if smoke:
+        cfg, gbdt = smoke_campaign()
+    else:
+        cfg, gbdt = CampaignConfig(reps=2), None
+    _, model, _ = run_campaign(cfg, out_root=root, gbdt_params=gbdt,
+                               smoke=smoke)
+    return model

@@ -1,0 +1,358 @@
+"""Declarative scenarios: topology + workload mix + disturbance schedule.
+
+A :class:`ScenarioSpec` is a pure-data description of one simulated
+cluster run.  Building it produces the engine-level pieces
+(``SimParams`` / ``SimTopo`` / ``WorkloadTable`` / ``SimState``) plus a
+deterministic per-tick :class:`~repro.pfs.state.Disturbance` schedule,
+so the same spec runs bit-equivalently on the numpy oracle
+(:func:`repro.pfs.workloads.run_interval`), the fused JAX scan
+(:class:`repro.pfs.engine_jax.FusedEngine`), and the vmapped batch path
+(:mod:`repro.lab.batch`).
+
+Disturbances are *exogenous*: conditions no client controls or observes
+directly.  They are expressed as piecewise/periodic events compiled into
+per-tick arrays (a pure function of the absolute tick index, so interval
+boundaries and backends cannot disagree):
+
+    ``ost_slow``   scale an OST's bandwidth *and* setup/IOPS capacity
+                   (a sick or failing disk is slow at both);
+    ``bg_burst``   background bytes/s arriving at an OST from clients
+                   outside the simulated fleet (noisy neighbours) — they
+                   are served first and inflate the congestion queue;
+    ``nic_slow``   scale a client's NIC ceiling (heterogeneous links).
+
+The registry at the bottom names the paper evaluation setups
+(vpic / bdcats / dlio / filebench) and beyond-paper stress scenarios;
+``python -m repro.lab list`` prints the catalog.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core.config_space import DEFAULT
+from repro.pfs.state import (Disturbance, SimParams, SimState, SimTopo,
+                             init_state)
+from repro.pfs.engine import READ, WRITE
+from repro.pfs.workloads import (Workload, WorkloadState, WorkloadTable,
+                                 bdcats_read, dlio_reader, random_stream,
+                                 sequential_stream, vpic_write)
+
+
+# ---------------------------------------------------------------------- #
+# disturbance events -> per-tick schedules
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class DisturbanceEvent:
+    """One piecewise/periodic exogenous condition.
+
+    Active on ticks whose time ``t`` satisfies ``start <= t < end`` and,
+    when ``period > 0``, ``(t - start) mod period < duty * period``
+    (square-wave bursting).  ``magnitude`` is a scale factor for the
+    ``*_slow`` kinds and background bytes/second for ``bg_burst``.
+    """
+
+    kind: str                 # "ost_slow" | "bg_burst" | "nic_slow"
+    targets: tuple            # OST ids (ost_*/bg_*) or client ids (nic_*)
+    magnitude: float
+    start: float = 0.0        # seconds
+    end: float = math.inf
+    period: float = 0.0       # 0 -> constant while inside [start, end)
+    duty: float = 1.0
+
+    def active(self, t: np.ndarray) -> np.ndarray:
+        act = (t >= self.start) & (t < self.end)
+        if self.period > 0:
+            act &= np.mod(t - self.start, self.period) < self.duty * self.period
+        return act
+
+
+def make_schedule(events, topo: SimTopo, params: SimParams,
+                  t0_tick: int, n_ticks: int) -> Disturbance:
+    """Compile events into one interval's per-tick Disturbance schedule.
+
+    Pure function of the absolute tick index ``t0_tick + i``, so
+    consecutive intervals tile seamlessly and every backend sees the
+    identical exogenous world.
+    """
+    t = (t0_tick + np.arange(n_ticks)) * params.tick
+    sched = Disturbance.neutral(topo, n_ticks=n_ticks)
+    for ev in events:
+        act = ev.active(t)
+        cols = np.asarray(ev.targets, dtype=np.int64)
+        if ev.kind == "ost_slow":
+            scale = np.where(act, ev.magnitude, 1.0)[:, None]
+            sched.bw_scale[:, cols] *= scale
+            sched.iops_scale[:, cols] *= scale
+        elif ev.kind == "bg_burst":
+            sched.bg_bytes[:, cols] += (act * ev.magnitude
+                                        * params.tick)[:, None]
+        elif ev.kind == "nic_slow":
+            sched.nic_scale[:, cols] *= np.where(act, ev.magnitude,
+                                                 1.0)[:, None]
+        else:
+            raise ValueError(f"unknown disturbance kind {ev.kind!r}")
+    return sched
+
+
+# ---------------------------------------------------------------------- #
+# scenario spec + build
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """Pure-data description of one simulated run.
+
+    ``workloads`` holds unbound :class:`~repro.pfs.workloads.Workload`
+    rows (the presets stay the row constructors); ``events`` the
+    exogenous disturbance schedule; ``initial_theta`` the knob setting
+    every OSC starts from (the Lustre default unless the scenario is
+    meant to demonstrate recovery from a pathological config).
+
+    The engine itself is deterministic: two builds of the same spec run
+    bit-identically.  ``seed`` seeds the *structure-preserving jitter*
+    :func:`variants` derives fan-out populations from — diversity across
+    a batch comes from jittered parameters and disturbance phases, not
+    from engine noise.
+    """
+
+    name: str
+    n_clients: int
+    n_osts: int
+    workloads: tuple = ()
+    events: tuple = ()
+    initial_theta: tuple = DEFAULT      # (window_pages, rpcs_in_flight)
+    seed: int = 0
+    description: str = ""
+    tags: tuple = ()
+
+    def make_workloads(self) -> list:
+        """Fresh (unshared) Workload row instances for attaching to sims."""
+        return [dataclasses.replace(w) for w in self.workloads]
+
+
+@dataclasses.dataclass
+class BuiltScenario:
+    """Engine-level pieces of one spec, ready to run or stack."""
+
+    spec: ScenarioSpec
+    params: SimParams
+    topo: SimTopo
+    table: WorkloadTable
+    state: SimState
+    wstate: WorkloadState
+
+    def schedule(self, t0_tick: int, n_ticks: int) -> Disturbance:
+        return make_schedule(self.spec.events, self.topo, self.params,
+                             t0_tick, n_ticks)
+
+
+def build(spec: ScenarioSpec, params: SimParams | None = None) -> BuiltScenario:
+    """Materialize a spec: topology, frozen workload table, fresh state."""
+    params = params or SimParams()
+    topo = SimTopo.dense(spec.n_clients, spec.n_osts)
+    state = init_state(topo)
+    w, f = spec.initial_theta
+    state.window_pages[:] = int(w)
+    state.rpcs_in_flight[:] = int(f)
+    table = WorkloadTable.from_workloads(spec.make_workloads(), topo)
+    wstate = table.init_wstate(state)
+    return BuiltScenario(spec=spec, params=params, topo=topo, table=table,
+                         state=state, wstate=wstate)
+
+
+def variants(spec: ScenarioSpec, n: int, seed: int = 0) -> list[ScenarioSpec]:
+    """``n`` structure-preserving jitters of a spec (for batch fan-out).
+
+    Continuous workload parameters (request size, thread rate,
+    randomness, duty cycling) and event magnitudes/phases are perturbed;
+    topology, row count, stripe layout, ops — everything that defines
+    the batchable *structure* — stay fixed, so any set of variants of
+    one spec stacks into a single vmapped launch.
+    """
+    out = []
+    for i in range(n):
+        rng = np.random.default_rng((seed << 16) ^ (spec.seed << 8) ^ i)
+        wls = tuple(dataclasses.replace(
+            w,
+            req_size=float(w.req_size) * 2.0 ** rng.uniform(-0.7, 0.7),
+            thread_rate=float(w.thread_rate) * rng.uniform(0.7, 1.3),
+            randomness=float(np.clip(w.randomness + rng.uniform(-0.1, 0.1),
+                                     0.0, 1.0)),
+            period=float(w.period) * rng.uniform(0.8, 1.25),
+        ) for w in spec.workloads)
+        evs = tuple(dataclasses.replace(
+            ev,
+            magnitude=(ev.magnitude * rng.uniform(0.6, 1.4)
+                       if ev.kind == "bg_burst"
+                       else float(np.clip(ev.magnitude * rng.uniform(0.7, 1.3),
+                                          0.01, 1.0))),
+            start=ev.start + rng.uniform(0.0, 0.5),
+        ) for ev in spec.events)
+        out.append(dataclasses.replace(
+            spec, name=f"{spec.name}#{i}", workloads=wls, events=evs,
+            seed=spec.seed + 1 + i))
+    return out
+
+
+# ---------------------------------------------------------------------- #
+# the catalog
+# ---------------------------------------------------------------------- #
+SCENARIOS: dict[str, ScenarioSpec] = {}
+
+
+def register(spec: ScenarioSpec) -> ScenarioSpec:
+    SCENARIOS[spec.name] = spec
+    return spec
+
+
+def scenario_names() -> list[str]:
+    return list(SCENARIOS)
+
+
+def get_scenario(name: str) -> ScenarioSpec:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"known: {', '.join(SCENARIOS)}") from None
+
+
+register(ScenarioSpec(
+    name="vpic_checkpoint",
+    n_clients=4, n_osts=4,
+    workloads=tuple(vpic_write(c, dims=1 + c % 3, osts=(0, 1, 2, 3))
+                    for c in range(4)),
+    description="H5bench VPIC-IO checkpoint: 4 clients write contiguous "
+                "particle arrays striped over all OSTs (Table II).",
+    tags=("paper", "write"),
+))
+
+register(ScenarioSpec(
+    name="bdcats_analysis",
+    n_clients=4, n_osts=4,
+    workloads=tuple(bdcats_read(c, mode, osts=(0, 1, 2, 3))
+                    for c, mode in enumerate(("partial", "strided",
+                                              "full", "partial"))),
+    description="H5bench BDCATS-IO analysis: partial/strided/full reads "
+                "of the VPIC output (Table II).",
+    tags=("paper", "read"),
+))
+
+register(ScenarioSpec(
+    name="dlio_bert",
+    n_clients=6, n_osts=2,
+    workloads=tuple(dlio_reader(c, "bert", n_threads=2 + c % 3,
+                                osts=(c % 2,)) for c in range(6)),
+    description="DLIO BERT input pipeline: shuffled smallish TFRecord "
+                "reads in epoch bursts (Fig. 3).",
+    tags=("paper", "read", "bursty"),
+))
+
+register(ScenarioSpec(
+    name="dlio_megatron",
+    n_clients=6, n_osts=2,
+    workloads=tuple(dlio_reader(c, "megatron", n_threads=2 + c % 4,
+                                osts=(c % 2,)) for c in range(6)),
+    description="DLIO Megatron input pipeline: larger sequential-ish "
+                "sample reads from indexed .bin files (Fig. 3).",
+    tags=("paper", "read", "bursty"),
+))
+
+register(ScenarioSpec(
+    name="filebench_mix",
+    n_clients=8, n_osts=2,
+    workloads=tuple(
+        (sequential_stream(c, READ, 4 * 2**20, ost=c % 2) if c % 2 else
+         random_stream(c, WRITE, 256 * 1024, ost=c % 2, n_threads=2))
+        for c in range(8)),
+    initial_theta=(64, 2),
+    description="Filebench-style mixed streams from a pathological "
+                "(64-page, 2-in-flight) start — the run_fleet recovery "
+                "scenario and the disturbance-free lab anchor.",
+    tags=("paper", "mixed"),
+))
+
+register(ScenarioSpec(
+    name="noisy_neighbor",
+    n_clients=4, n_osts=2,
+    workloads=tuple(
+        (sequential_stream(c, READ, 4 * 2**20, ost=c % 2) if c < 2 else
+         bdcats_read(c, "strided", osts=(0, 1))) for c in range(4)),
+    events=(
+        DisturbanceEvent("bg_burst", targets=(0,), magnitude=450e6,
+                         start=1.0, period=4.0, duty=0.5),
+        DisturbanceEvent("bg_burst", targets=(1,), magnitude=450e6,
+                         start=3.0, period=4.0, duty=0.5),
+    ),
+    description="Contention bursts: un-modeled tenants slam alternating "
+                "OSTs with 450 MB/s background traffic on a 4 s square "
+                "wave; local RPC latency is the only visible symptom.",
+    tags=("beyond-paper", "contention-burst"),
+))
+
+register(ScenarioSpec(
+    name="degraded_ost",
+    n_clients=4, n_osts=4,
+    workloads=tuple(
+        (vpic_write(c, dims=2, osts=(0, 1, 2, 3)) if c < 2 else
+         bdcats_read(c, "full", osts=(0, 1, 2, 3))) for c in range(4)),
+    events=(
+        DisturbanceEvent("ost_slow", targets=(1,), magnitude=0.3,
+                         start=2.0),
+    ),
+    description="Degraded OST: one of four stripe targets drops to 30% "
+                "bandwidth and IOPS mid-run (sick disk), turning every "
+                "full-stripe op into a straggler problem.",
+    tags=("beyond-paper", "degraded-ost"),
+))
+
+register(ScenarioSpec(
+    name="failing_ost",
+    n_clients=4, n_osts=4,
+    workloads=tuple(bdcats_read(c, ("partial", "strided")[c % 2],
+                                osts=(0, 1, 2, 3)) for c in range(4)),
+    events=(
+        DisturbanceEvent("ost_slow", targets=(0,), magnitude=0.05,
+                         start=3.0),
+    ),
+    description="Failing OST: stripe target 0 collapses to 5% capacity "
+                "at t=3 s and never recovers.",
+    tags=("beyond-paper", "degraded-ost"),
+))
+
+register(ScenarioSpec(
+    name="hetero_links",
+    n_clients=8, n_osts=2,
+    workloads=tuple(sequential_stream(c, READ, 8 * 2**20, ost=c % 2,
+                                      n_threads=2) for c in range(8)),
+    events=(
+        DisturbanceEvent("nic_slow", targets=(4, 5, 6, 7), magnitude=0.12),
+    ),
+    description="Heterogeneous client links: half the clients sit behind "
+                "a 12% NIC (edge boxes on the slow fabric); per-client "
+                "optima diverge.",
+    tags=("beyond-paper", "hetero-links"),
+))
+
+register(ScenarioSpec(
+    name="bursty_arrivals",
+    n_clients=6, n_osts=2,
+    workloads=tuple(
+        dataclasses.replace(
+            dlio_reader(c, "bert" if c % 2 else "megatron",
+                        n_threads=2 + c % 3, osts=(c % 2,)),
+            duty_cycle=0.4 if c % 2 else 0.5,
+            period=2.0 if c % 2 else 3.0)
+        for c in range(6)),
+    events=(
+        DisturbanceEvent("bg_burst", targets=(0, 1), magnitude=300e6,
+                         start=0.5, period=2.0, duty=0.25),
+    ),
+    description="Bursty arrivals: short-duty DLIO epochs plus 300 MB/s "
+                "background spikes every 2 s — steady state never lasts "
+                "a full tuning interval.",
+    tags=("beyond-paper", "contention-burst", "bursty"),
+))

@@ -41,7 +41,8 @@ Public API:
 """
 
 from repro.pfs.engine import PFSSim, SimParams, PAGE_SIZE
-from repro.pfs.state import SimState, SimTopo, engine_step, init_state
+from repro.pfs.state import (Disturbance, SimState, SimTopo, engine_step,
+                             init_state)
 from repro.pfs.workloads import (
     Workload,
     WorkloadTable,
@@ -60,6 +61,7 @@ __all__ = [
     "SimParams",
     "SimTopo",
     "SimState",
+    "Disturbance",
     "engine_step",
     "init_state",
     "PAGE_SIZE",

@@ -28,11 +28,11 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.pfs.state import (PAGE_SIZE, READ, WRITE, SimParams, SimState,
-                             SimTopo, engine_step, init_state)
+from repro.pfs.state import (PAGE_SIZE, READ, WRITE, Disturbance, SimParams,
+                             SimState, SimTopo, engine_step, init_state)
 
-__all__ = ["PFSSim", "SimParams", "SimTopo", "SimState", "engine_step",
-           "init_state", "PAGE_SIZE", "READ", "WRITE"]
+__all__ = ["PFSSim", "SimParams", "SimTopo", "SimState", "Disturbance",
+           "engine_step", "init_state", "PAGE_SIZE", "READ", "WRITE"]
 
 
 class PFSSim:
@@ -162,12 +162,13 @@ class PFSSim:
     # ------------------------------------------------------------------ #
     # the tick
     # ------------------------------------------------------------------ #
-    def step(self) -> None:
+    def step(self, disturbance: Disturbance | None = None) -> None:
         # (1) workloads deposit demand (mutates state arrays in place) …
         for w in self._workloads:
             w.tick(self, self.params.tick)
         # … then the pure core advances every other phase
-        self.state = engine_step(self.params, self.topo, self.state, None)
+        self.state = engine_step(self.params, self.topo, self.state, None,
+                                 disturbance=disturbance)
 
     def run(self, seconds: float) -> None:
         n = int(round(seconds / self.params.tick))

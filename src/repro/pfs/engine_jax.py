@@ -28,8 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import enable_x64
 
 from repro.kernels.segment_reduce.ops import make_segment_sum
-from repro.pfs.state import (PAGE_SIZE, READ, WRITE, Demand, SimParams,
-                             SimState, SimTopo)
+from repro.pfs.state import (PAGE_SIZE, READ, WRITE, Demand, Disturbance,
+                             SimParams, SimState, SimTopo)
 from repro.pfs.workloads import WorkloadState, WorkloadTable
 
 
@@ -40,7 +40,8 @@ def _div_where(num, den, cond, fallback):
 
 
 def engine_step_jax(params: SimParams, topo: SimTopo, state: SimState,
-                    demand: Demand | None, segsum) -> SimState:
+                    demand: Demand | None, segsum,
+                    disturbance: Disturbance | None = None) -> SimState:
     """Pure-jnp mirror of :func:`repro.pfs.state.engine_step`.
 
     Same phase structure and same arithmetic, with the bincount call
@@ -52,6 +53,8 @@ def engine_step_jax(params: SimParams, topo: SimTopo, state: SimState,
     dt = p.tick
     n_osts, n_clients = topo.n_osts, topo.n_clients
     osc_ost, osc_client = topo.osc_ost, topo.osc_client
+    dist = (disturbance if disturbance is not None
+            else Disturbance.neutral(topo))
 
     # unpack per-op rows as locals (functional SSA instead of mutation)
     pending = [state.pending[READ], state.pending[WRITE]]
@@ -144,7 +147,7 @@ def engine_step_jax(params: SimParams, topo: SimTopo, state: SimState,
     # (4) OST setup service + IOPS ceiling
     total_work = setup_work[READ] + setup_work[WRITE]
     ost_work = segsum(total_work, osc_ost, n_osts)
-    cap = dt * p.ost_setup_parallel
+    cap = dt * p.ost_setup_parallel * dist.iops_scale
     drain_frac_ost = _div_where(cap, ost_work, ost_work > cap, 1.0)
     for op in (READ, WRITE):
         work = setup_work[op]
@@ -152,7 +155,7 @@ def engine_step_jax(params: SimParams, topo: SimTopo, state: SimState,
         per_rpc = p.setup_time(randomness[op]) + p.rtt
         setups_done = _div_where(drained, per_rpc, per_rpc > 0, 0.0)
         ost_setups = segsum(setups_done, osc_ost, n_osts)
-        iops_cap = p.ost_iops * dt
+        iops_cap = p.ost_iops * dt * dist.iops_scale
         iops_frac = _div_where(iops_cap, ost_setups, ost_setups > iops_cap, 1.0)
         effective = drained * iops_frac[osc_ost]
         setup_work[op] = work - effective
@@ -166,7 +169,7 @@ def engine_step_jax(params: SimParams, topo: SimTopo, state: SimState,
     # (5) bandwidth: OST fair share + congestion decay + NIC cap
     want = ready_b[READ] + ready_b[WRITE]
     queued = unready[READ] + unready[WRITE] + ready_b[READ] + ready_b[WRITE]
-    ost_queued = segsum(queued, osc_ost, n_osts)
+    ost_queued = segsum(queued, osc_ost, n_osts) + dist.bg_bytes
     eff = jnp.where(
         ost_queued > p.ost_buffer_bytes,
         jnp.power(p.ost_buffer_bytes / jnp.maximum(ost_queued, 1.0),
@@ -177,16 +180,22 @@ def engine_step_jax(params: SimParams, topo: SimTopo, state: SimState,
     ost_shares = segsum(active_transfer, osc_ost, n_osts)
     share = _div_where(active_transfer, ost_shares[osc_ost],
                        ost_shares[osc_ost] > 0, 0.0)
-    ost_bw_eff = p.ost_bandwidth * eff
-    alloc = jnp.minimum(share * ost_bw_eff[osc_ost] * dt, want)
-    leftover = ost_bw_eff * dt - segsum(alloc, osc_ost, n_osts)
+    ost_bw_eff = p.ost_bandwidth * dist.bw_scale * eff
+    # background traffic is served first, shrinking the foreground
+    # budget; same subtraction form as the numpy oracle so the
+    # zero-background case keeps the historical multiplication order
+    bg_served = jnp.minimum(dist.bg_bytes, ost_bw_eff * dt)
+    alloc = jnp.minimum(
+        share * ost_bw_eff[osc_ost] * dt - share * bg_served[osc_ost], want)
+    leftover = (ost_bw_eff * dt - bg_served) - segsum(alloc, osc_ost, n_osts)
     hungry = want - alloc
     ost_hungry = segsum(hungry, osc_ost, n_osts)
     bonus_frac = _div_where(leftover, ost_hungry, ost_hungry > 0, 0.0)
     alloc = alloc + hungry * jnp.minimum(bonus_frac[osc_ost], 1.0)
+    nic_cap = p.nic_bandwidth * dist.nic_scale * dt
     client_alloc = segsum(alloc, osc_client, n_clients)
-    nic_frac = _div_where(p.nic_bandwidth * dt, client_alloc,
-                          client_alloc > p.nic_bandwidth * dt, 1.0)
+    nic_frac = _div_where(nic_cap, client_alloc,
+                          client_alloc > nic_cap, 1.0)
     alloc = alloc * nic_frac[osc_client]
 
     # (6) completions
@@ -292,28 +301,43 @@ class FusedEngine:
         self.table = table
         self.n_ticks = int(n_ticks)
         segsum = make_segment_sum(seg_backend)
+        # every interval scans over a per-tick Disturbance schedule; an
+        # undisturbed run scans the (exact-identity) neutral schedule so
+        # jit sees a single signature either way
+        self._neutral_sched = Disturbance.neutral(topo, n_ticks=self.n_ticks)
 
-        def body(carry, _):
+        def body(carry, dist):
             state, wstate = carry
             demand, wstate = table.demand_step(params, wstate, state,
                                                xp=jnp, segsum=segsum)
-            state = engine_step_jax(params, topo, state, demand, segsum)
+            state = engine_step_jax(params, topo, state, demand, segsum,
+                                    disturbance=dist)
             return (state, wstate), None
 
         @jax.jit
-        def run(state, wstate):
+        def run(state, wstate, sched):
             (state, wstate), _ = jax.lax.scan(
-                body, (state, wstate), None, length=self.n_ticks)
+                body, (state, wstate), sched, length=self.n_ticks)
             return state, wstate
 
         self._run = run
 
-    def run_interval(self, state: SimState, wstate: WorkloadState):
-        """Advance one interval; numpy in, numpy out (float64 end to end)."""
+    def run_interval(self, state: SimState, wstate: WorkloadState,
+                     schedule: Disturbance | None = None):
+        """Advance one interval; numpy in, numpy out (float64 end to end).
+
+        ``schedule`` is a :class:`Disturbance` whose arrays carry a
+        leading ``(n_ticks, ...)`` time axis — tick ``i`` of the scan
+        consumes row ``i`` (scan ``xs``), exactly as the numpy reference
+        :func:`repro.pfs.workloads.run_interval` indexes it.
+        """
+        if schedule is None:
+            schedule = self._neutral_sched
         with enable_x64():
             jstate = jax.tree.map(jnp.asarray, state)
             jws = jax.tree.map(jnp.asarray, wstate)
-            jstate, jws = self._run(jstate, jws)
+            jsched = jax.tree.map(jnp.asarray, schedule)
+            jstate, jws = self._run(jstate, jws, jsched)
             jstate, jws = jax.tree.map(lambda x: x.block_until_ready()
                                        if hasattr(x, "block_until_ready")
                                        else x, (jstate, jws))

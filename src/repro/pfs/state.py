@@ -23,6 +23,7 @@ working unchanged.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
@@ -229,6 +230,55 @@ class Demand:
     # |Demand| == app-visible write completions: bytes_done[WRITE] += dirty_add
 
 
+_DISTURBANCE_FIELDS = ("bw_scale", "iops_scale", "bg_bytes", "nic_scale")
+
+
+@dataclasses.dataclass
+class Disturbance:
+    """One tick of exogenous conditions the simulated cluster is under.
+
+    These are the environment inputs no client controls or observes
+    directly — the scenario lab uses them to express noisy neighbours,
+    degraded or failing OSTs, and heterogeneous client links as per-tick
+    schedules (leading time axis) threaded through the numpy oracle and
+    the fused JAX scan identically (scan ``xs``).  The neutral values
+    (scales of 1, zero background bytes) are exact arithmetic identities,
+    so an undisturbed run is bit-equal to the historical engine.
+    """
+
+    bw_scale: np.ndarray    # (n_osts,) multiplier on OST service bandwidth
+    iops_scale: np.ndarray  # (n_osts,) multiplier on setup/IOPS capacity
+    bg_bytes: np.ndarray    # (n_osts,) background bytes arriving this tick
+    nic_scale: np.ndarray   # (n_clients,) multiplier on client NIC cap
+
+    @classmethod
+    def neutral(cls, topo: "SimTopo", n_ticks: int | None = None) -> "Disturbance":
+        """Identity disturbance; with ``n_ticks`` a whole neutral schedule."""
+        shape = (lambda n: (n,)) if n_ticks is None else (lambda n: (n_ticks, n))
+        return cls(
+            bw_scale=np.ones(shape(topo.n_osts)),
+            iops_scale=np.ones(shape(topo.n_osts)),
+            bg_bytes=np.zeros(shape(topo.n_osts)),
+            nic_scale=np.ones(shape(topo.n_clients)),
+        )
+
+    def at_tick(self, i: int) -> "Disturbance":
+        """Tick ``i`` of a schedule (arrays carry a leading time axis)."""
+        return Disturbance(bw_scale=self.bw_scale[i],
+                           iops_scale=self.iops_scale[i],
+                           bg_bytes=self.bg_bytes[i],
+                           nic_scale=self.nic_scale[i])
+
+
+@functools.lru_cache(maxsize=64)
+def _neutral_cached(n_osts: int, n_clients: int) -> Disturbance:
+    """Shared identity Disturbance per topology size — the undisturbed
+    per-tick oracle path must not pay four allocations per call.  Callers
+    never mutate a Disturbance, so sharing is safe."""
+    return Disturbance(bw_scale=np.ones(n_osts), iops_scale=np.ones(n_osts),
+                       bg_bytes=np.zeros(n_osts), nic_scale=np.ones(n_clients))
+
+
 # Register the state dataclasses as JAX pytrees when jax is importable so
 # they thread through jit / lax.scan; numpy-only deployments skip this.
 try:  # pragma: no cover - exercised implicitly by engine_jax tests
@@ -236,7 +286,8 @@ try:  # pragma: no cover - exercised implicitly by engine_jax tests
 
     for _cls, _fields in ((SimState, _STATE_FIELDS),
                           (Demand, tuple(f.name for f in
-                                         dataclasses.fields(Demand)))):
+                                         dataclasses.fields(Demand))),
+                          (Disturbance, _DISTURBANCE_FIELDS)):
         _jax.tree_util.register_pytree_node(
             _cls,
             (lambda s, _f=_fields: (tuple(getattr(s, n) for n in _f), None)),
@@ -266,7 +317,8 @@ def apply_demand(state: SimState, demand: Demand) -> None:
 
 
 def engine_step(params: SimParams, topo: SimTopo, state: SimState,
-                demand: Demand | None = None) -> SimState:
+                demand: Demand | None = None,
+                disturbance: Disturbance | None = None) -> SimState:
     """One pure engine tick: ``state' = engine_step(params, topo, state)``.
 
     A verbatim extraction of the historical ``PFSSim.step`` phases
@@ -274,7 +326,9 @@ def engine_step(params: SimParams, topo: SimTopo, state: SimState,
     accounting) operating on a :class:`SimState`.  ``demand`` carries the
     tick's workload submissions; pass ``None`` when submissions were
     already folded in by the stateful wrapper (legacy ``Workload``
-    objects calling ``submit_*`` on the sim).
+    objects calling ``submit_*`` on the sim).  ``disturbance`` carries
+    the tick's exogenous conditions (OST degradation, background
+    traffic, NIC heterogeneity); ``None`` means the neutral identity.
 
     The input state is never mutated; a fresh numpy state is returned.
     This function is the semantic oracle for the fused JAX path.
@@ -285,6 +339,8 @@ def engine_step(params: SimParams, topo: SimTopo, state: SimState,
     n_osts = topo.n_osts
     osc_ost = topo.osc_ost
     osc_client = topo.osc_client
+    dist = (disturbance if disturbance is not None
+            else _neutral_cached(topo.n_osts, topo.n_clients))
 
     # (1) workloads deposit demand
     if demand is not None:
@@ -344,7 +400,7 @@ def engine_step(params: SimParams, topo: SimTopo, state: SimState,
     # drain setup work; a separate IOPS ceiling caps completed setups.
     total_work = s.setup_work[READ] + s.setup_work[WRITE]
     ost_work = np.bincount(osc_ost, weights=total_work, minlength=n_osts)
-    cap = dt * p.ost_setup_parallel
+    cap = dt * p.ost_setup_parallel * dist.iops_scale
     drain_frac_ost = np.divide(cap, ost_work,
                                out=np.ones(n_osts), where=ost_work > cap)
     # IOPS ceiling, applied on setups completed this tick per OST
@@ -356,7 +412,7 @@ def engine_step(params: SimParams, topo: SimTopo, state: SimState,
                                 out=np.zeros_like(drained), where=per_rpc > 0)
         ost_setups = np.bincount(osc_ost, weights=setups_done,
                                  minlength=n_osts)
-        iops_cap = p.ost_iops * dt
+        iops_cap = p.ost_iops * dt * dist.iops_scale
         iops_frac = np.divide(iops_cap, ost_setups, out=np.ones(n_osts),
                               where=ost_setups > iops_cap)
         effective = drained * iops_frac[osc_ost]
@@ -378,7 +434,8 @@ def engine_step(params: SimParams, topo: SimTopo, state: SimState,
     want = s.ready_bytes[READ] + s.ready_bytes[WRITE]
     queued = (s.unready_bytes[READ] + s.unready_bytes[WRITE]
               + s.ready_bytes[READ] + s.ready_bytes[WRITE])
-    ost_queued = np.bincount(osc_ost, weights=queued, minlength=n_osts)
+    ost_queued = np.bincount(osc_ost, weights=queued,
+                             minlength=n_osts) + dist.bg_bytes
     over = ost_queued > p.ost_buffer_bytes
     eff = np.where(
         over,
@@ -393,10 +450,17 @@ def engine_step(params: SimParams, topo: SimTopo, state: SimState,
     share = np.divide(active_transfer, ost_shares[osc_ost],
                       out=np.zeros_like(active_transfer),
                       where=ost_shares[osc_ost] > 0)
-    ost_bw_eff = p.ost_bandwidth * eff
-    alloc = np.minimum(share * ost_bw_eff[osc_ost] * dt, want)
+    ost_bw_eff = p.ost_bandwidth * dist.bw_scale * eff
+    # background traffic is served first (it belongs to clients outside
+    # the fleet; the server cannot tell it apart), shrinking this tick's
+    # foreground budget.  Written as a subtraction of the background
+    # share so the zero-background case keeps the historical
+    # multiplication order bit for bit.
+    bg_served = np.minimum(dist.bg_bytes, ost_bw_eff * dt)
+    alloc = np.minimum(
+        share * ost_bw_eff[osc_ost] * dt - share * bg_served[osc_ost], want)
     # redistribute leftover OST bandwidth to still-hungry OSCs
-    leftover = ost_bw_eff * dt - np.bincount(
+    leftover = (ost_bw_eff * dt - bg_served) - np.bincount(
         osc_ost, weights=alloc, minlength=n_osts)
     hungry = want - alloc
     ost_hungry = np.bincount(osc_ost, weights=hungry, minlength=n_osts)
@@ -404,11 +468,12 @@ def engine_step(params: SimParams, topo: SimTopo, state: SimState,
                            where=ost_hungry > 0)
     alloc = alloc + hungry * np.minimum(bonus_frac[osc_ost], 1.0)
     # NIC cap per client
+    nic_cap = p.nic_bandwidth * dist.nic_scale * dt
     client_alloc = np.bincount(osc_client, weights=alloc,
                                minlength=topo.n_clients)
-    nic_frac = np.divide(p.nic_bandwidth * dt, client_alloc,
+    nic_frac = np.divide(nic_cap, client_alloc,
                          out=np.ones(topo.n_clients),
-                         where=client_alloc > p.nic_bandwidth * dt)
+                         where=client_alloc > nic_cap)
     alloc = alloc * nic_frac[osc_client]
 
     # (6) completions

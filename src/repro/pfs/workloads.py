@@ -321,7 +321,7 @@ class WorkloadTable:
         e_row, e_osc = self.entry_row, self.entry_osc
         slen_e = self.stripe_len[e_row]
         rand_row_e = self.randomness[e_row]
-        req_floor_e = np.maximum(self.req_size, 1.0)[e_row]
+        req_floor_e = xp.maximum(self.req_size, 1.0)[e_row]
 
         # threaded (functional) copies of the sequentially-mixed fields
         rand_r = state.randomness[READ]
@@ -416,6 +416,30 @@ class WorkloadTable:
         return demand, WorkloadState(issued=issued, done_base=wstate.done_base)
 
 
+# The table is itself a pytree (arrays as children; n_osc / n_waves as
+# static aux data) so the scenario lab can stack B structurally-identical
+# tables and vmap demand_step over the batch axis.  ``names`` is display
+# metadata only and deliberately not round-tripped through tree ops.
+_TABLE_ARRAY_FIELDS = (
+    "client", "op", "req_size", "randomness", "n_threads", "thread_rate",
+    "duty_cycle", "period", "stripe_len", "wave", "entry_row", "entry_osc",
+)
+
+try:  # pragma: no cover - exercised implicitly by the lab batch tests
+    import jax as _jax2
+
+    _jax2.tree_util.register_pytree_node(
+        WorkloadTable,
+        lambda t: (tuple(getattr(t, f) for f in _TABLE_ARRAY_FIELDS),
+                   (t.n_osc, t.n_waves)),
+        lambda aux, children: WorkloadTable(
+            **dict(zip(_TABLE_ARRAY_FIELDS, children)),
+            n_osc=aux[0], n_waves=aux[1]),
+    )
+except ImportError:  # pragma: no cover
+    pass
+
+
 def table_from_sim(sim):
     """Freeze a live sim's attached workloads into (table, wstate).
 
@@ -439,14 +463,19 @@ def sync_workloads_from_table(sim, wstate: WorkloadState) -> None:
 
 
 def run_interval(params: SimParams, topo: SimTopo, table: WorkloadTable,
-                 state: SimState, wstate: WorkloadState, n_ticks: int):
+                 state: SimState, wstate: WorkloadState, n_ticks: int,
+                 schedule=None):
     """Numpy reference interval runner over the vectorized workload table.
 
     Steps ``n_ticks`` of ``demand_step`` + :func:`engine_step` — the same
     schedule the fused JAX scan executes, on the oracle backend.
+    ``schedule`` is an optional :class:`~repro.pfs.state.Disturbance`
+    with a leading ``(n_ticks, ...)`` time axis; tick ``i`` consumes row
+    ``i``, mirroring the scan's ``xs`` consumption exactly.
     """
     from repro.pfs.state import engine_step
-    for _ in range(n_ticks):
+    for i in range(n_ticks):
         demand, wstate = table.demand_step(params, wstate, state)
-        state = engine_step(params, topo, state, demand)
+        dist = None if schedule is None else schedule.at_tick(i)
+        state = engine_step(params, topo, state, demand, disturbance=dist)
     return state, wstate

@@ -1,0 +1,238 @@
+"""Scenario Lab equivalence and end-to-end tests.
+
+The two load-bearing properties:
+
+* a vmapped batch of K scenarios matches K independent numpy
+  ``run_interval`` calls on every probe counter (the batch axis changes
+  the schedule, never the physics);
+* a disturbance-free ScenarioSpec driven through the lab reproduces
+  today's ``run_fleet`` knob trajectory exactly on both engine backends
+  (the lab is a superset, not a fork).
+
+Plus: neutral disturbances are exact identities, schedules actually
+bite (degraded OST / background bursts lower delivered bytes), the
+catalog is well-formed, and a tiny campaign trains a versioned model
+that ``run_fleet`` loads and uses.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+
+from repro.lab.batch import run_batch, stack_scenarios
+from repro.lab.scenarios import (SCENARIOS, build, get_scenario,
+                                 make_schedule, variants)
+from repro.pfs import PFSSim
+from repro.pfs.state import Disturbance, engine_step
+from repro.pfs.workloads import run_interval as np_run_interval
+
+TICKS = 50
+PROBE_COUNTERS = (
+    "ctr_bytes_done", "ctr_rpcs_sent", "ctr_rpc_bytes", "ctr_partial_rpcs",
+    "ctr_latency_sum", "ctr_rpcs_done", "ctr_req_count", "ctr_req_bytes",
+    "ctr_cache_hit_bytes", "ctr_block_time", "ctr_pending_integral",
+    "ctr_active_integral", "ctr_dirty_integral", "ctr_grant_integral",
+    "randomness", "dirty_bytes", "grant_used", "write_blocked",
+)
+
+
+def assert_counters_close(a_state, b_state, rtol):
+    for f in PROBE_COUNTERS:
+        a = np.asarray(getattr(a_state, f), dtype=float)
+        b = np.asarray(getattr(b_state, f), dtype=float)
+        err = np.max(np.abs(a - b) / np.maximum(np.abs(a), 1.0))
+        assert err <= rtol, (f, err)
+
+
+# ---------------------------------------------------------------------- #
+# disturbance plumbing
+# ---------------------------------------------------------------------- #
+def test_neutral_disturbance_is_exact_identity():
+    """engine_step with the neutral Disturbance == engine_step without,
+    bit for bit — undisturbed runs cannot drift from the historical
+    engine."""
+    b = build(get_scenario("filebench_mix"))
+    state, wstate = b.state, b.wstate
+    neutral = Disturbance.neutral(b.topo)
+    for _ in range(20):
+        demand, wstate = b.table.demand_step(b.params, wstate, state)
+        plain = engine_step(b.params, b.topo, state, demand)
+        dist = engine_step(b.params, b.topo, state, demand,
+                           disturbance=neutral)
+        for f in PROBE_COUNTERS + ("pending", "ready_bytes", "setup_work"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(plain, f)), np.asarray(getattr(dist, f)),
+                err_msg=f)
+        state = plain
+
+
+def test_disturbances_bite():
+    """Degraded-OST and background-burst schedules reduce delivered
+    bytes vs the same scenario undisturbed, on the numpy oracle."""
+    for name in ("degraded_ost", "noisy_neighbor"):
+        spec = get_scenario(name)
+        quiet = dataclasses.replace(spec, events=())
+        done = {}
+        for label, s in (("disturbed", spec), ("quiet", quiet)):
+            b = build(s)
+            st, ws = b.state, b.wstate
+            for i in range(10):
+                sched = b.schedule(i * TICKS, TICKS)
+                st, ws = np_run_interval(b.params, b.topo, b.table, st, ws,
+                                         TICKS, schedule=sched)
+            done[label] = float(np.asarray(st.ctr_bytes_done).sum())
+        assert done["disturbed"] < 0.97 * done["quiet"], (name, done)
+
+
+def test_schedule_tiles_across_intervals():
+    """make_schedule is a pure function of the absolute tick index: two
+    50-tick intervals concatenate to one 100-tick schedule exactly."""
+    b = build(get_scenario("noisy_neighbor"))
+    whole = b.schedule(0, 100)
+    first, second = b.schedule(0, 50), b.schedule(50, 50)
+    for f in ("bw_scale", "iops_scale", "bg_bytes", "nic_scale"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(whole, f)),
+            np.concatenate([np.asarray(getattr(first, f)),
+                            np.asarray(getattr(second, f))]), err_msg=f)
+
+
+# ---------------------------------------------------------------------- #
+# batch equivalence (satellite)
+# ---------------------------------------------------------------------- #
+def test_batch_matches_independent_runs():
+    """A vmapped batch of K disturbed scenario variants matches K
+    independent numpy run_interval calls on all probe counters."""
+    specs = variants(get_scenario("noisy_neighbor"), 3, seed=7)
+    batch = stack_scenarios([build(s) for s in specs])
+    run_batch(batch, model=None, seconds=1.0, interval=0.25)
+
+    steps = int(round(0.25 / 0.005))
+    for k, spec in enumerate(specs):
+        b = build(spec)
+        st, ws = b.state, b.wstate
+        for i in range(4):
+            sched = b.schedule(i * steps, steps)
+            st, ws = np_run_interval(b.params, b.topo, b.table, st, ws,
+                                     steps, schedule=sched)
+
+        class _Row:
+            pass
+
+        row = _Row()
+        for f in PROBE_COUNTERS:
+            setattr(row, f, np.asarray(getattr(batch.state, f))[k])
+        assert_counters_close(st, row, 1e-6)
+
+
+def test_disturbance_free_spec_reproduces_run_fleet(dial_model):
+    """The lab path with no disturbances == today's run_fleet: identical
+    decisions and knob trajectories on both engine backends."""
+    from repro.core.fleet import run_fleet
+
+    spec = get_scenario("filebench_mix")
+
+    def fleet_run(backend):
+        sim = PFSSim(n_clients=spec.n_clients, n_osts=spec.n_osts)
+        for w in spec.make_workloads():
+            sim.attach(w)
+        w0, f0 = spec.initial_theta
+        sim.set_knobs(np.arange(sim.n_osc), window_pages=w0,
+                      rpcs_in_flight=f0)
+        fleet = run_fleet(sim, dial_model, seconds=3.0, interval=0.5,
+                          backend=backend)
+        return fleet, sim.window_pages.copy(), sim.rpcs_in_flight.copy()
+
+    def traj(fleet):
+        return [(r.oscs.tolist(), r.ops.tolist(),
+                 r.decisions.theta.tolist(), r.decisions.changed.tolist())
+                for r in fleet.decisions]
+
+    f_np, win_np, rif_np = fleet_run("numpy")
+    f_jax, win_jax, rif_jax = fleet_run("jax")
+
+    batch = stack_scenarios([build(spec)])
+    f_lab = run_batch(batch, model=dial_model, seconds=3.0, interval=0.5)
+
+    assert traj(f_np) == traj(f_jax) == traj(f_lab)
+    for win, rif in ((win_np, rif_np), (win_jax, rif_jax)):
+        np.testing.assert_array_equal(win,
+                                      np.asarray(batch.state.window_pages)[0])
+        np.testing.assert_array_equal(rif,
+                                      np.asarray(batch.state.rpcs_in_flight)[0])
+
+
+# ---------------------------------------------------------------------- #
+# catalog + campaign + evaluate
+# ---------------------------------------------------------------------- #
+def test_catalog_well_formed():
+    assert len(SCENARIOS) >= 6
+    tags = [t for s in SCENARIOS.values() for t in s.tags]
+    assert "contention-burst" in tags
+    assert "degraded-ost" in tags
+    for name, spec in SCENARIOS.items():
+        b = build(spec)      # every spec materializes
+        assert b.topo.n_osc == spec.n_clients * spec.n_osts
+        for ev in spec.events:
+            sched = make_schedule([ev], b.topo, b.params, 0, 10)
+            assert np.asarray(sched.bw_scale).shape == (10, spec.n_osts)
+
+
+def test_variants_preserve_structure():
+    spec = get_scenario("degraded_ost")
+    vs = variants(spec, 4, seed=3)
+    assert len({v.name for v in vs}) == 4
+    batch = stack_scenarios([build(v) for v in vs])   # raises on mismatch
+    assert len(batch) == 4
+
+
+def test_campaign_model_loads_into_run_fleet(tmp_path):
+    """Acceptance: a lab campaign trains a model that run_fleet can load
+    and use."""
+    from repro.core.fleet import run_fleet
+    from repro.core.gbdt import GBDTParams
+    from repro.core.model import DIALModel
+    from repro.lab.campaign import (CampaignConfig, SMOKE_GRID,
+                                    latest_version, run_campaign)
+    from repro.pfs.workloads import random_stream, sequential_stream
+
+    root = str(tmp_path / "models")
+    cfg = CampaignConfig(seconds=10.0, reps=1, grid=SMOKE_GRID, seed=2)
+    d, model, info = run_campaign(
+        cfg, out_root=root, gbdt_params=GBDTParams(n_trees=15, max_depth=3))
+    assert info["samples"]["read"] > 0 and info["samples"]["write"] > 0
+    assert latest_version(root) is not None
+
+    loaded = DIALModel.load(d + "/dial")
+    sim = PFSSim(n_clients=4, n_osts=2)
+    from repro.pfs.engine import READ, WRITE
+    for c in range(4):
+        if c % 2:
+            sim.attach(sequential_stream(c, READ, 4 * 2**20, ost=c % 2))
+        else:
+            sim.attach(random_stream(c, WRITE, 256 * 1024, ost=c % 2))
+    fleet = run_fleet(sim, loaded, seconds=2.0, interval=0.5)
+    assert fleet is not None      # ran end to end with the loaded model
+
+
+def test_evaluate_scenario_reports_policies(dial_model, tmp_path):
+    import json
+    import os
+
+    from repro.lab.evaluate import evaluate, render_markdown, write_report
+
+    report = evaluate(names=["noisy_neighbor", "degraded_ost"],
+                      model=dial_model, seconds=1.5, interval=0.5)
+    assert report["summary"]["n_scenarios"] == 2
+    for row in report["scenarios"]:
+        assert row["best_static_mbs"] >= row["default_mbs"] - 1e-9
+        assert row["dial_mbs"] > 0
+    md = render_markdown(report)
+    assert "noisy_neighbor" in md and "DIAL/default" in md
+    jpath, mpath = write_report(report, str(tmp_path / "report"))
+    with open(jpath) as f:
+        assert json.load(f)["summary"]["n_scenarios"] == 2
+    assert os.path.exists(mpath)

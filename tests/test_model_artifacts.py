@@ -1,0 +1,86 @@
+"""Model artifact persistence: campaigns must be able to save and reload
+forests with bit-identical inference.
+
+Covers the three layers the lab leans on: ``DenseForest.save/load``,
+``DIALModel.save/load`` (forests + space + k), and the versioned
+campaign artifact directory (``save_versioned`` / ``load_versioned`` /
+``LATEST`` resolution).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.config_space import SPACE
+from repro.core.gbdt import DenseForest, GBDTClassifier, GBDTParams
+from repro.core.model import DIALModel
+
+
+@pytest.fixture(scope="module")
+def forests():
+    rng = np.random.default_rng(42)
+    n, dim = 400, 12
+    X = rng.normal(size=(n, dim)).astype(np.float32)
+    out = []
+    for seed in (0, 1):
+        y = (X[:, seed] + 0.3 * rng.normal(size=n) > 0).astype(float)
+        clf = GBDTClassifier(GBDTParams(n_trees=25, max_depth=4, seed=seed))
+        out.append(clf.fit(X, y).forest)
+    return out[0], out[1], X
+
+
+def test_dense_forest_roundtrip_bit_identical(tmp_path, forests):
+    f, _, X = forests
+    path = str(tmp_path / "forest.npz")
+    f.save(path)
+    g = DenseForest.load(path)
+    assert g.depth == f.depth and g.n_features == f.n_features
+    assert g.base_score == f.base_score
+    np.testing.assert_array_equal(g.feature, f.feature)
+    np.testing.assert_array_equal(g.threshold, f.threshold)
+    np.testing.assert_array_equal(g.leaf, f.leaf)
+    np.testing.assert_array_equal(g.predict_proba(X), f.predict_proba(X))
+
+
+def test_dial_model_roundtrip_bit_identical(tmp_path, forests):
+    fr, fw, X = forests
+    model = DIALModel(read_forest=fr, write_forest=fw, space=SPACE, k=1)
+    prefix = str(tmp_path / "dial")
+    model.save(prefix)
+    loaded = DIALModel.load(prefix)
+    assert loaded.k == model.k
+    assert len(loaded.space) == len(model.space)
+    for op in (0, 1):
+        np.testing.assert_array_equal(loaded.predict_proba(op, X),
+                                      model.predict_proba(op, X))
+
+
+def test_versioned_artifacts_roundtrip_and_latest(tmp_path, forests):
+    from repro.lab.campaign import (latest_version, load_versioned,
+                                    save_versioned)
+
+    fr, fw, X = forests
+    root = str(tmp_path / "models")
+    m1 = DIALModel(read_forest=fr, write_forest=fw)
+    m2 = DIALModel(read_forest=fw, write_forest=fr)   # distinct payload
+    d1 = save_versioned(m1, root, meta={"note": "first"})
+    d2 = save_versioned(m2, root, meta={"note": "second"})
+    assert d1.endswith("v001") and d2.endswith("v002")
+    assert latest_version(root) == "v002"
+
+    latest = load_versioned(root)
+    np.testing.assert_array_equal(latest.predict_proba(0, X),
+                                  m2.predict_proba(0, X))
+    pinned = load_versioned(root, version="v001")
+    np.testing.assert_array_equal(pinned.predict_proba(1, X),
+                                  m1.predict_proba(1, X))
+    import json
+    import os
+    with open(os.path.join(d2, "manifest.json")) as f:
+        assert json.load(f)["version"] == "v002"
+
+
+def test_load_versioned_missing_raises(tmp_path):
+    from repro.lab.campaign import load_versioned
+
+    with pytest.raises(FileNotFoundError):
+        load_versioned(str(tmp_path / "nothing"))
