@@ -1,6 +1,6 @@
 PY ?= python
 
-.PHONY: verify deps bench-fleet
+.PHONY: verify deps bench-fleet bench-train bench-json lab-smoke continual-smoke
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -12,6 +12,17 @@ verify:
 bench-fleet:
 	PYTHONPATH=src $(PY) benchmarks/fleet_scaling.py --quick
 
+bench-train:
+	PYTHONPATH=src $(PY) benchmarks/train_scaling.py --quick
+
+# full benchmark sweep + machine-readable perf record
+bench-json:
+	PYTHONPATH=src $(PY) benchmarks/run.py --json reports/BENCH_latest.json
+
 # CI-sized scenario-catalog sweep (writes reports/lab/report.{json,md})
 lab-smoke:
 	PYTHONPATH=src $(PY) -m repro.lab evaluate --smoke
+
+# CI-sized frozen-vs-online continual run (writes reports/lab/continual.json)
+continual-smoke:
+	PYTHONPATH=src $(PY) -m repro.lab continual --smoke

@@ -1,66 +1,115 @@
 """Benchmark orchestrator: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows plus the detailed tables.
+``--json PATH`` additionally writes the rows as a machine-readable
+``BENCH_*.json`` (one object per benchmark: name / us_per_call /
+derived key-values) so the perf trajectory can be tracked across
+commits (``make bench-json``).
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import platform
 import time
 
 
-def main() -> None:
+def _record(records: list, name: str, us_per_call: float,
+            derived: dict) -> None:
+    pairs = ";".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{name},{us_per_call:.0f},{pairs}")
+    records.append({"name": name, "us_per_call": round(us_per_call),
+                    "derived": derived})
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the summary rows as JSON "
+                         "(e.g. reports/BENCH_latest.json)")
+    args = ap.parse_args(argv)
+
     import benchmarks.fig3_dlio as fig3
     import benchmarks.fleet_scaling as fleet
     import benchmarks.lab_scaling as labsc
     import benchmarks.sim_scaling as simsc
     import benchmarks.table2_h5bench as t2
     import benchmarks.table3_overhead as t3
+    import benchmarks.train_scaling as trainsc
 
+    records: list[dict] = []
     print("name,us_per_call,derived")
 
     t0 = time.time()
     rows2 = t2.run()
     el = (time.time() - t0) * 1e6 / max(len(rows2), 1)
     worst = min(r["dial_frac_of_optimal"] for r in rows2)
-    print(f"table2_h5bench,{el:.0f},min_frac_of_optimal={worst:.3f}")
+    _record(records, "table2_h5bench", el,
+            {"min_frac_of_optimal": round(worst, 3)})
 
     t0 = time.time()
     rows3 = fig3.run()
     el = (time.time() - t0) * 1e6 / max(len(rows3), 1)
     best = max(r["speedup"] for r in rows3)
-    print(f"fig3_dlio,{el:.0f},max_speedup_vs_default={best:.2f}x")
+    _record(records, "fig3_dlio", el,
+            {"max_speedup_vs_default": round(best, 2)})
 
     t0 = time.time()
     res = t3.run(backend="numpy")
     el = (time.time() - t0) * 1e6
-    print(f"table3_overhead,{el:.0f},"
-          f"read_e2e_ms={res['read']['end_to_end_ms']:.2f};"
-          f"write_e2e_ms={res['write']['end_to_end_ms']:.2f}")
+    _record(records, "table3_overhead", el,
+            {"read_e2e_ms": round(res["read"]["end_to_end_ms"], 2),
+             "write_e2e_ms": round(res["write"]["end_to_end_ms"], 2)})
 
     t0 = time.time()
     fm = fleet.get_model("numpy")
     rf = fleet.bench(128, 2, fm)
     el = (time.time() - t0) * 1e6
-    print(f"fleet_scaling,{el:.0f},"
-          f"fleet_ms_per_osc={rf['fleet_ms']:.3f};"
-          f"loop_ms_per_osc={rf['loop_ms']:.3f};"
-          f"speedup={rf['speedup']:.1f}x")
+    _record(records, "fleet_scaling", el,
+            {"fleet_ms_per_osc": round(rf["fleet_ms"], 3),
+             "loop_ms_per_osc": round(rf["loop_ms"], 3),
+             "speedup": round(rf["speedup"], 1)})
 
     t0 = time.time()
     rs = simsc.bench(256)
     el = (time.time() - t0) * 1e6
-    print(f"sim_scaling,{el:.0f},"
-          f"loop_tps={rs['loop_ticks_per_s']:.0f};"
-          f"fused_tps={rs['fused_ticks_per_s']:.0f};"
-          f"speedup={rs['speedup']:.1f}x")
+    _record(records, "sim_scaling", el,
+            {"loop_tps": round(rs["loop_ticks_per_s"]),
+             "fused_tps": round(rs["fused_ticks_per_s"]),
+             "speedup": round(rs["speedup"], 1)})
 
     t0 = time.time()
     rl = labsc.bench(32)
     el = (time.time() - t0) * 1e6
-    print(f"lab_scaling,{el:.0f},"
-          f"seq_sim_s_per_s={rl['seq_scenario_s_per_s']:.1f};"
-          f"batch_sim_s_per_s={rl['batch_scenario_s_per_s']:.1f};"
-          f"speedup={rl['speedup']:.1f}x")
+    _record(records, "lab_scaling", el,
+            {"seq_sim_s_per_s": round(rl["seq_scenario_s_per_s"], 1),
+             "batch_sim_s_per_s": round(rl["batch_scenario_s_per_s"], 1),
+             "speedup": round(rl["speedup"], 1)})
+
+    t0 = time.time()
+    rt = trainsc.bench(16)
+    el = (time.time() - t0) * 1e6
+    _record(records, "train_scaling", el,
+            {"numpy_forests_per_s": round(rt["numpy_forests_per_s"], 2),
+             "fast_forests_per_s": round(rt["fast_forests_per_s"], 2),
+             "exact_forests_per_s": round(rt["exact_forests_per_s"], 2),
+             "fast_speedup": round(rt["fast_speedup"], 1)})
+
+    if args.json:
+        import os
+
+        payload = {
+            "schema": "dial-bench-v1",
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "benchmarks": records,
+        }
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"\nwrote {args.json}")
 
     print("\n--- Table II detail ---")
     for r in rows2:

@@ -139,18 +139,38 @@ def collect(cfg: CollectConfig = CollectConfig(),
 
 
 def train_models(data: dict, gbdt_params: GBDTParams | None = None,
-                 space: ConfigSpace = SPACE) -> DIALModel:
-    """Fit the separate read/write GBDTs and bundle them."""
+                 space: ConfigSpace = SPACE,
+                 backend: str = "numpy") -> DIALModel:
+    """Fit the separate read/write GBDTs and bundle them.
+
+    ``backend="numpy"`` is the sequential oracle loop; ``"jax"`` trains
+    both forests in one vmapped jitted launch
+    (:func:`repro.learn.boost.train_models_jax`) with split-for-split
+    parity.  Either way the returned model carries ``train_meta``
+    (trainer backend + dataset fingerprint) for artifact validation.
+    """
+    from repro.core.model import dataset_fingerprint
+
     params = gbdt_params or GBDTParams()
-    forests = {}
-    for op_name in ("read", "write"):
-        X, y = data[op_name]
-        if len(X) == 0:
-            raise ValueError(f"no {op_name} samples collected")
-        clf = GBDTClassifier(params).fit(X, y)
-        forests[op_name] = clf.forest
-    return DIALModel(read_forest=forests["read"],
-                     write_forest=forests["write"], space=space)
+    if backend == "jax":
+        from repro.learn.boost import train_models_jax  # lazy: needs jax
+
+        model = train_models_jax(data, params, space)
+    elif backend == "numpy":
+        forests = {}
+        for op_name in ("read", "write"):
+            X, y = data[op_name]
+            if len(X) == 0:
+                raise ValueError(f"no {op_name} samples collected")
+            clf = GBDTClassifier(params).fit(X, y)
+            forests[op_name] = clf.forest
+        model = DIALModel(read_forest=forests["read"],
+                          write_forest=forests["write"], space=space)
+    else:
+        raise ValueError(f"unknown trainer backend {backend!r}")
+    model.train_meta = {"trainer_backend": backend,
+                        "dataset": dataset_fingerprint(data)}
+    return model
 
 
 def main(argv=None) -> None:

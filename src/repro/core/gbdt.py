@@ -28,6 +28,36 @@ def _sigmoid(x: np.ndarray) -> np.ndarray:
     return 1.0 / (1.0 + np.exp(-np.clip(x, -30, 30)))
 
 
+# Split gains are rounded to this many decimals before argmax so that
+# mathematically-equal candidates stay tied under any float summation
+# order; ties then break on (feature, bin) order in every trainer
+# backend (numpy loop and repro.learn.boost must agree split for split).
+GAIN_DECIMALS = 9
+
+
+# ---------------------------------------------------------------------- #
+# quantile binning, shared by this trainer and repro.learn.boost (the
+# jitted trainer reproduces this trainer's splits only because both bin
+# through the exact same code path)
+# ---------------------------------------------------------------------- #
+def quantile_edges(X: np.ndarray, n_bins: int) -> list[np.ndarray]:
+    """Per-feature quantile bin edges (deduplicated, possibly empty)."""
+    X = np.asarray(X, dtype=np.float64)
+    qs_grid = np.linspace(0, 1, n_bins + 1)[1:-1]
+    return [np.unique(np.quantile(X[:, f], qs_grid))
+            for f in range(X.shape[1])]
+
+
+def bin_codes(X: np.ndarray, edges: list[np.ndarray]) -> np.ndarray:
+    """Integer bin codes: ``code > b  <=>  x > edges[f][b]`` (side-right
+    searchsorted, the raw-threshold-compatible binning semantics)."""
+    X = np.asarray(X, dtype=np.float64)
+    Xb = np.empty(X.shape, dtype=np.int16)
+    for f, e in enumerate(edges):
+        Xb[:, f] = np.searchsorted(e, X[:, f], side="right")
+    return Xb
+
+
 @dataclasses.dataclass
 class DenseForest:
     """Inference-ready forest in dense layout (see module docstring)."""
@@ -105,14 +135,9 @@ class GBDTClassifier:
         n, n_feat = X.shape
         rng = np.random.default_rng(p.seed)
 
-        # quantile binning: per-feature edges; binned codes in uint8
-        edges = []
-        Xb = np.empty((n, n_feat), dtype=np.int16)
-        for f in range(n_feat):
-            qs = np.quantile(X[:, f], np.linspace(0, 1, p.n_bins + 1)[1:-1])
-            e = np.unique(qs)
-            edges.append(e)
-            Xb[:, f] = np.searchsorted(e, X[:, f], side="right")
+        # quantile binning: per-feature edges; small-int binned codes
+        edges = quantile_edges(X, p.n_bins)
+        Xb = bin_codes(X, edges)
         self._edges = edges
 
         pos = y.mean()
@@ -199,6 +224,11 @@ class GBDTClassifier:
                               - G ** 2 / (H + lam))
                 gain = np.where((HL >= p.min_child_hess)
                                 & (HR >= p.min_child_hess), gain, -np.inf)
+                # quantize so mathematically-tied candidates (e.g. two
+                # features isolating the same sample set) compare equal
+                # regardless of float summation order, and the (feature,
+                # bin) tie-break below is stable across trainer backends
+                gain = np.round(gain, GAIN_DECIMALS)
                 for j in range(n_level):
                     b = int(np.argmax(gain[j]))
                     gj = gain[j, b]

@@ -17,6 +17,8 @@ formulation evaluates all interfaces x configs in a single launch.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 
 import numpy as np
 
@@ -26,6 +28,22 @@ from repro.core.metrics import Snapshot, feature_vector
 from repro.pfs.engine import READ, WRITE
 
 
+def dataset_fingerprint(data: dict) -> dict:
+    """Row counts + a cheap content hash of a ``{'read': (X, y), 'write':
+    (X, y)}`` training dict — persisted with trained artifacts so
+    evaluations can refuse models trained on a different dataset."""
+    import hashlib
+
+    h = hashlib.sha256()
+    counts = {}
+    for op_name in ("read", "write"):
+        X, y = data[op_name]
+        counts[op_name] = int(len(X))
+        h.update(np.ascontiguousarray(np.asarray(X, dtype=np.float32)))
+        h.update(np.ascontiguousarray(np.asarray(y, dtype=np.float64)))
+    return {"rows": counts, "sha256": h.hexdigest()[:16]}
+
+
 @dataclasses.dataclass
 class DIALModel:
     read_forest: DenseForest
@@ -33,10 +51,27 @@ class DIALModel:
     space: ConfigSpace = SPACE
     backend: str = "numpy"
     k: int = 1  # history length (paper uses k=1)
+    # provenance: trainer backend + dataset fingerprint, persisted by
+    # save/load so artifact consumers can detect mismatched models
+    train_meta: dict = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         self._theta_feats = self.space.as_features()  # (|Theta|, 2) log2
         self._jax_fns = {}
+
+    def update_forests(self, read_forest: DenseForest | None = None,
+                       write_forest: DenseForest | None = None) -> None:
+        """Swap retrained forests in place (the online-refit path).
+
+        Invalidates every cached jitted predictor — the old closures
+        hold the stale forests on device — so the next score builds
+        fresh ones from the new arrays.
+        """
+        if read_forest is not None:
+            self.read_forest = read_forest
+        if write_forest is not None:
+            self.write_forest = write_forest
+        self._jax_fns.clear()
 
     def forest(self, op: int) -> DenseForest:
         return self.read_forest if op == READ else self.write_forest
@@ -110,10 +145,26 @@ class DIALModel:
     def save(self, prefix: str) -> None:
         self.read_forest.save(prefix + ".read.npz")
         self.write_forest.save(prefix + ".write.npz")
+        meta_path = prefix + ".meta.json"
+        if self.train_meta:
+            with open(meta_path, "w") as f:
+                json.dump(self.train_meta, f, indent=2, default=str)
+        elif os.path.exists(meta_path):
+            # never leave another model's provenance attached to these
+            # forests — a stale meta.json would defeat the artifact guard
+            os.remove(meta_path)
 
     @staticmethod
     def load(prefix: str, backend: str = "numpy") -> "DIALModel":
+        meta = {}
+        meta_path = prefix + ".meta.json"
+        if os.path.exists(meta_path):
+            try:
+                with open(meta_path) as f:
+                    meta = json.load(f)
+            except (OSError, ValueError):
+                meta = {}
         return DIALModel(
             read_forest=DenseForest.load(prefix + ".read.npz"),
             write_forest=DenseForest.load(prefix + ".write.npz"),
-            backend=backend)
+            backend=backend, train_meta=meta)

@@ -1,0 +1,120 @@
+"""Shared dispatch for the GBDT training histogram primitive.
+
+Every per-level reduction in the :mod:`repro.learn` trainer routes
+through :func:`tree_histogram`, so one dispatch decides the execution
+strategy for the whole boosting pass (mirroring
+:mod:`repro.kernels.segment_reduce.ops`):
+
+==========  ============================================================
+backend      implementation
+==========  ============================================================
+``numpy``    ``np.bincount`` per channel (the oracle)
+``jax``      ``jax.ops.segment_sum`` (XLA scatter-add)
+``matmul``   dense factorized one-hot contraction (CPU/GPU default —
+             XLA's CPU scatter runs tens of ns per element, while the
+             same reduction as two one-hot products is BLAS work)
+``pallas``   one-hot-matmul Pallas kernel (TPU default; MXU, no scatter)
+``auto``     pallas on TPU, matmul elsewhere
+==========  ============================================================
+
+Every backend drops samples whose ``node`` id falls outside
+``[0, n_nodes)`` — the sibling-subtraction trick addresses only left
+children and parks right-child samples on id ``n_nodes``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+# NOTE: jax/pallas implementations import lazily so the numpy oracle
+# stays importable without jax (same contract as segment_reduce.ops).
+
+
+@functools.lru_cache(maxsize=1)
+def _default_jax_backend() -> str:
+    import jax
+    return "pallas" if jax.default_backend() == "tpu" else "matmul"
+
+
+def _tree_histogram_segsum(values, bins, node, n_nodes: int, n_bins: int):
+    """XLA scatter-add fallback: one flat segment_sum over (sample, feature)
+    pairs, all channels riding the trailing data axis."""
+    import jax
+    import jax.numpy as jnp
+
+    values = jnp.asarray(values)
+    bins = jnp.asarray(bins)
+    node = jnp.asarray(node)
+    c, n = values.shape
+    f = bins.shape[1]
+    flat = ((node[:, None] * f + jnp.arange(f)[None, :]) * n_bins
+            + bins).ravel()                                   # (n*F,)
+    data = jnp.broadcast_to(values.T[:, None, :], (n, f, c)).reshape(-1, c)
+    out = jax.ops.segment_sum(data, flat,
+                              num_segments=n_nodes * f * n_bins)
+    return jnp.transpose(out.reshape(n_nodes, f, n_bins, c), (3, 0, 1, 2))
+
+
+def bin_onehot(bins, n_bins: int, dtype=None):
+    """Static per-feature bin one-hot ``(n, F * n_bins)`` — hoistable
+    (bin codes never change across levels or trees of one training run)."""
+    import jax.numpy as jnp
+
+    bins = jnp.asarray(bins)
+    n, f = bins.shape
+    oh = (bins[:, :, None] == jnp.arange(n_bins)[None, None, :])
+    return oh.reshape(n, f * n_bins).astype(dtype or jnp.float64)
+
+
+def matmul_histogram(values, onehot, node, n_nodes: int, n_bins: int):
+    """The factorized dense contraction given a prebuilt bin one-hot.
+
+    ``out[c,j,f,b] = sum_i [node_i = j] values[c,i] onehot[i, f*NB+b]``
+    as (node one-hot * values) @ onehot — two dense products, no
+    scatter.  Out-of-range node ids match no one-hot row and drop.
+    """
+    import jax.numpy as jnp
+
+    c, n = values.shape
+    sel = (node[None, :] == jnp.arange(n_nodes)[:, None]
+           ).astype(values.dtype)                      # (n_nodes, n)
+    u = (values[:, None, :] * sel[None]).reshape(c * n_nodes, n)
+    out = u @ onehot                                   # (C*nodes, F*NB)
+    return out.reshape(c, n_nodes, -1, n_bins)
+
+
+def _tree_histogram_matmul(values, bins, node, n_nodes: int, n_bins: int):
+    """Self-contained matmul backend (builds the bin one-hot per call;
+    hoist it with :func:`bin_onehot` + :func:`matmul_histogram` when
+    calling repeatedly over static bins, as the trainer does)."""
+    import jax.numpy as jnp
+
+    values = jnp.asarray(values)
+    return matmul_histogram(values, bin_onehot(bins, n_bins, values.dtype),
+                            jnp.asarray(node), n_nodes, n_bins)
+
+
+def make_tree_histogram(backend: str = "auto"):
+    """Return ``tree_histogram(values, bins, node, n_nodes, n_bins)`` for
+    a backend name; the returned callable is safe to close over under
+    jit (and under ``vmap`` for the ``jax`` path)."""
+    if backend == "numpy":
+        from repro.kernels.tree_histogram import ref as _ref
+        return _ref.tree_histogram_np
+    if backend == "auto":
+        backend = _default_jax_backend()
+    if backend == "jax":
+        return _tree_histogram_segsum
+    if backend == "matmul":
+        return _tree_histogram_matmul
+    if backend in ("pallas", "pallas_interpret"):
+        from repro.kernels.tree_histogram import kernel as _kernel
+        interpret = backend == "pallas_interpret"
+        return functools.partial(_kernel.tree_histogram, interpret=interpret)
+    raise ValueError(f"unknown tree_histogram backend {backend!r}")
+
+
+def tree_histogram(values, bins, node, n_nodes: int, n_bins: int,
+                   backend: str = "auto"):
+    """One-call convenience over :func:`make_tree_histogram`."""
+    return make_tree_histogram(backend)(values, bins, node, n_nodes, n_bins)

@@ -1,0 +1,46 @@
+"""Numpy oracle for per-(node, feature, bin) histogram accumulation.
+
+Histogram GBDT training reduces each boosting level to one multi-channel
+scatter-add: for every sample, add its per-channel statistics (gradient,
+hessian, sample count, ...) into the cell addressed by (its current tree
+node, a feature, that feature's bin code).  This module is the
+``np.add.at`` oracle the jax/pallas implementations are pinned against.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def tree_histogram_np(values, bins, node, n_nodes: int, n_bins: int):
+    """``out[c, j, f, b] = sum(values[c, i] : node[i]==j, bins[i,f]==b)``.
+
+    Args:
+        values: ``(C, n)`` per-sample channel statistics (g, h, count...).
+        bins:   ``(n, F)`` integer bin codes in ``[0, n_bins)``.
+        node:   ``(n,)`` level-local node assignment in ``[0, n_nodes)``.
+        n_nodes, n_bins: static output extents.
+
+    Samples whose ``node`` id falls outside ``[0, n_nodes)`` are dropped
+    (the sibling-subtraction trick addresses only left children and
+    parks right-child samples on id ``n_nodes``).
+
+    Returns ``(C, n_nodes, F, n_bins)`` float64.
+    """
+    values = np.asarray(values, dtype=np.float64)
+    bins = np.asarray(bins)
+    node = np.asarray(node)
+    keep = (node >= 0) & (node < n_nodes)
+    values, bins, node = values[:, keep], bins[keep], node[keep]
+    c, n = values.shape
+    f = bins.shape[1]
+    out = np.zeros((c, n_nodes, f, n_bins), dtype=np.float64)
+    # flat (node, bin) cell per (sample, feature); one bincount per channel
+    flat = (node[:, None] * f + np.arange(f)[None, :]) * n_bins + bins
+    flat = flat.ravel()
+    size = n_nodes * f * n_bins
+    for ch in range(c):
+        w = np.repeat(values[ch], f)
+        out[ch] = np.bincount(flat, weights=w,
+                              minlength=size).reshape(n_nodes, f, n_bins)
+    return out

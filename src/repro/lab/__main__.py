@@ -4,11 +4,15 @@
     python -m repro.lab evaluate [--smoke] [--scenarios A B ...]
                                  [--model PREFIX] [--out reports/lab]
     python -m repro.lab campaign [--smoke] [--out models/lab]
+    python -m repro.lab continual [--smoke] [--scenario failing_ost]
 
 ``evaluate`` runs every registered scenario (or the named subset) under
 every static θ plus DIAL and writes ``report.json`` / ``report.md``;
 ``campaign`` runs batched offline collection + training and saves a
-versioned model artifact.  ``--smoke`` shrinks both to CI size.
+versioned model artifact; ``continual`` runs one drifting scenario
+twice — frozen model vs online refit (replay buffer + drift trigger +
+jitted retraining) — and reports the post-failure recovery.
+``--smoke`` shrinks each to CI size.
 """
 
 from __future__ import annotations
@@ -59,9 +63,38 @@ def _cmd_campaign(args) -> None:
                              seed=args.seed)
         gbdt = None
     d, _, info = run_campaign(cfg, out_root=args.out, gbdt_params=gbdt,
-                              smoke=args.smoke)
+                              smoke=args.smoke,
+                              trainer_backend=args.trainer_backend)
     print(f"saved {d}: {info['samples']} samples, "
-          f"positive rates {info['positive_rate']}")
+          f"positive rates {info['positive_rate']}, "
+          f"trainer {info['train_meta']['trainer_backend']}")
+
+
+def _cmd_continual(args) -> None:
+    from repro.core.gbdt import GBDTParams
+    from repro.core.model import DIALModel
+    from repro.lab.continual import run_comparison, write_report
+    from repro.learn.online import OnlinePolicy
+
+    model = DIALModel.load(args.model) if args.model else None
+    seconds = 10.0 if args.smoke else args.seconds
+    gbdt = (GBDTParams(n_trees=20, max_depth=4) if args.smoke
+            else GBDTParams(n_trees=40, max_depth=5))
+    policy = OnlinePolicy(refit_every=args.refit_every,
+                          min_samples=16 if args.smoke else 32,
+                          explore_eps=args.explore_eps)
+    report = run_comparison(args.scenario, model=model, seconds=seconds,
+                            interval=args.interval, policy=policy,
+                            gbdt_params=gbdt, smoke=args.smoke)
+    path = write_report(report, args.out)
+    fr, on = report["frozen"], report["online"]
+    print(f"{args.scenario}: failure at t={report['t_fail']}s, "
+          f"{report['refits']} refit(s), "
+          f"{on['samples']} online samples -> {path}")
+    print(f"post-failure MB/s: frozen {fr['post_fail_mbs']:.1f}, "
+          f"online {on['post_fail_mbs']:.1f} "
+          f"({report['post_fail_gain']:.2f}x; tail "
+          f"{report['post_tail_gain']:.2f}x)")
 
 
 def main(argv=None) -> None:
@@ -95,10 +128,28 @@ def main(argv=None) -> None:
     cp.add_argument("--seed", type=int, default=0)
     cp.add_argument("--out", default="models/lab")
     cp.add_argument("--smoke", action="store_true")
+    cp.add_argument("--trainer-backend", default="numpy",
+                    choices=("numpy", "jax"),
+                    help="GBDT training path (jax = one vmapped launch "
+                         "for the read+write pair)")
+
+    ct = sub.add_parser("continual", help="frozen vs online-refit run of "
+                                          "a drifting scenario")
+    ct.add_argument("--scenario", default="failing_ost")
+    ct.add_argument("--seconds", type=float, default=45.0)
+    ct.add_argument("--interval", type=float, default=0.5)
+    ct.add_argument("--refit-every", type=int, default=10)
+    ct.add_argument("--explore-eps", type=float, default=0.10)
+    ct.add_argument("--model", default=None,
+                    help="DIALModel prefix (default: evaluate's model "
+                         "resolution order)")
+    ct.add_argument("--out", default="reports/lab")
+    ct.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (10 s, small refits)")
 
     args = ap.parse_args(argv)
     {"list": _cmd_list, "evaluate": _cmd_evaluate,
-     "campaign": _cmd_campaign}[args.cmd](args)
+     "campaign": _cmd_campaign, "continual": _cmd_continual}[args.cmd](args)
 
 
 if __name__ == "__main__":

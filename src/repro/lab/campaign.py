@@ -249,22 +249,48 @@ def save_versioned(model: DIALModel, root: str = "models/lab",
 
 
 def load_versioned(root: str = "models/lab", version: str | None = None,
-                   backend: str = "numpy") -> DIALModel:
+                   backend: str = "numpy", strict: bool = True) -> DIALModel:
+    """Load one versioned artifact, refusing tampered/mismatched ones.
+
+    When both the campaign ``manifest.json`` and the model's own
+    ``dial.meta.json`` carry training provenance (trainer backend +
+    dataset row counts/hash), they must agree — a mismatch means the
+    forests on disk are not the ones this campaign trained (partial
+    copy, stale overwrite), which ``strict`` turns into an error.
+    """
     v = version or latest_version(root)
     if v is None:
         raise FileNotFoundError(f"no campaign artifacts under {root!r}")
-    return DIALModel.load(os.path.join(root, v, "dial"), backend=backend)
+    d = os.path.join(root, v)
+    model = DIALModel.load(os.path.join(d, "dial"), backend=backend)
+    if strict and model.train_meta:
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest_meta = json.load(f).get("train_meta")
+        except (OSError, ValueError):
+            manifest_meta = None
+        if manifest_meta is not None and manifest_meta != model.train_meta:
+            raise ValueError(
+                f"artifact {d!r} is inconsistent: manifest train_meta "
+                f"{manifest_meta} != model meta {model.train_meta} "
+                "(forests on disk do not match the campaign that wrote "
+                "the manifest; pass strict=False to override)")
+    return model
 
 
 def run_campaign(cfg: CampaignConfig = CampaignConfig(),
                  out_root: str = "models/lab",
                  gbdt_params: GBDTParams | None = None,
-                 smoke: bool = False):
+                 smoke: bool = False, trainer_backend: str = "numpy"):
     """collect → train → save one versioned artifact.
 
     ``smoke`` marks the manifest so quality-sensitive consumers
     (:func:`repro.lab.evaluate.default_model`) can refuse to silently
-    inherit a CI-sized model.  Returns ``(artifact_dir, model, info)``.
+    inherit a CI-sized model; ``trainer_backend`` selects the GBDT
+    training path (``"jax"`` = both forests in one vmapped launch) and
+    is recorded — with the dataset fingerprint — in both the manifest
+    and the model's own metadata.  Returns ``(artifact_dir, model,
+    info)``.
     """
     data = collect_batch(cfg)
     info = {
@@ -275,6 +301,7 @@ def run_campaign(cfg: CampaignConfig = CampaignConfig(),
                                if len(data[op][1]) else 0.0)
                           for op in ("read", "write")},
     }
-    model = train_models(data, gbdt_params)
+    model = train_models(data, gbdt_params, backend=trainer_backend)
+    info["train_meta"] = model.train_meta
     d = save_versioned(model, out_root, meta=info)
     return d, model, info

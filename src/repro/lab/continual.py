@@ -1,0 +1,284 @@
+"""Continual in-lab retraining: a scenario that refits its model mid-run.
+
+The evaluate path (:mod:`repro.lab.evaluate`) tunes every scenario with
+a *frozen* offline model, so scenarios whose storage system drifts
+mid-run (``degraded_ost`` / ``failing_ost``) are scored by a model that
+has never seen the post-drift regime.  This module closes the loop:
+
+* every tuning interval, the DIAL agent's own decisions are labeled one
+  interval later with the paper's improvement criterion
+  (``tput_{t+1}/tput_t > 1 + eps``) and pushed into per-op
+  :class:`~repro.learn.online.ReplayBuffer` rings;
+* an epsilon-greedy sprinkle of random θ keeps the on-policy stream
+  from collapsing onto one configuration;
+* :class:`~repro.learn.online.OnlineTrainer` watches fleet throughput
+  for drift (fast/slow EMA divergence) and periodically refits the
+  forests with one jitted :func:`repro.learn.boost.fit_forest_batch`
+  launch, swapping them into the live model between intervals.
+
+``run_comparison`` drives the same scenario twice — frozen model vs
+online refit — and reports pre/post-failure throughput for both; the
+``python -m repro.lab continual`` CLI prints and persists the result.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import json
+import math
+import os
+
+import numpy as np
+
+from repro.core.config_space import SPACE
+from repro.core.dataset import EPS_IMPROVE
+from repro.core.fleet import FleetAgent
+from repro.core.gbdt import GBDTParams
+from repro.core.metrics import fleet_feature_matrix, snapshot_all
+from repro.core.model import DIALModel
+from repro.core.tuner import TunerParams
+from repro.lab.batch import BatchEngine, BatchPort, stack_scenarios
+from repro.lab.scenarios import ScenarioSpec, build, get_scenario
+from repro.learn.online import OnlinePolicy, OnlineTrainer
+from repro.pfs.engine import READ, WRITE
+
+
+@dataclasses.dataclass
+class ContinualResult:
+    """One policy's run of one drifting scenario."""
+
+    scenario: str
+    online: bool
+    seconds: float
+    interval: float
+    t_fail: float                 # first disturbance onset (inf if none)
+    tput_mbs: list                # per-interval fleet MB/s
+    refits: list                  # OnlineTrainer refit records
+    samples: dict                 # labeled rows collected per op
+    pre_fail_mbs: float
+    post_fail_mbs: float          # mean over every post-onset interval
+    post_tail_mbs: float          # mean over the later post-onset half
+    changes: int
+
+    def row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _first_onset(spec: ScenarioSpec) -> float:
+    starts = [ev.start for ev in spec.events]
+    return min(starts) if starts else math.inf
+
+
+def run_continual(spec: ScenarioSpec, model: DIALModel, *,
+                  online: bool = True, seconds: float = 30.0,
+                  interval: float = 0.5,
+                  policy: OnlinePolicy = OnlinePolicy(),
+                  gbdt_params: GBDTParams | None = None,
+                  seed_data: dict | None = None,
+                  seg_backend: str = "jax",
+                  tuner_params: TunerParams = TunerParams(),
+                  seed: int = 0) -> ContinualResult:
+    """Drive one scenario with DIAL tuning and (optionally) online refit.
+
+    The labeling loop mirrors the campaign's explore/label recipe, but
+    on-policy: each interval's *applied* θ (the agent's decision, or an
+    epsilon-greedy random θ) becomes a pending sample labeled by the
+    next interval's throughput ratio.
+    """
+    rng = np.random.default_rng(seed)
+    batch = stack_scenarios([build(spec)])
+    port = BatchPort(batch)
+    fleet = FleetAgent(port, model, tuner_params=tuner_params)
+    trainer = None
+    if online:
+        trainer = OnlineTrainer(model, gbdt_params, policy=policy)
+        if seed_data is not None:
+            trainer.seed(seed_data)
+
+    steps = max(int(round(interval / batch.params.tick)), 1)
+    n_intervals = int(round(seconds / interval))
+    engine = BatchEngine(batch.params, batch.topo, steps,
+                         seg_backend=seg_backend)
+    theta_feats = SPACE.as_features()
+    configs = SPACE.configs()
+    m = len(configs)
+
+    prev = port.probe_all()
+    hist: collections.deque = collections.deque(maxlen=fleet.k + 1)
+    pending = None       # (rows, ops, feats, tput) awaiting next label
+    series: list[float] = []
+    n_samples = {READ: 0, WRITE: 0}
+
+    for _ in range(n_intervals):
+        t0 = float(np.ravel(np.asarray(batch.state.now))[0])
+        sched = batch.schedule(int(round(t0 / batch.params.tick)), steps)
+        batch.state, batch.wstate = engine.run_interval(
+            batch.table, batch.state, batch.wstate, sched)
+
+        cur = port.probe_all()
+        snap = snapshot_all(prev, cur)
+        prev = cur
+        hist.append(snap)
+        series.append(float((snap.read_volume + snap.write_volume).sum()
+                            / snap.dt / 1e6))
+
+        # label the previous interval's applied configurations
+        if pending is not None and trainer is not None:
+            rows, ops_p, feats, tput0 = pending
+            op_tput = np.where(ops_p == READ, snap.read[rows, 0],
+                               snap.write[rows, 0])
+            vol = np.where(ops_p == READ, snap.read_volume[rows],
+                           snap.write_volume[rows])
+            ok = (tput0 > 0) & (vol >= fleet.min_volume)
+            for op in (READ, WRITE):
+                sel = ok & (ops_p == op)
+                if sel.any():
+                    labels = (op_tput[sel] / tput0[sel]
+                              > 1.0 + EPS_IMPROVE).astype(float)
+                    trainer.observe(op, feats[sel], labels)
+                    n_samples[op] += int(sel.sum())
+        pending = None
+
+        # the agent's tuning tick (probes the same state again — cheap)
+        result = fleet.tick()
+
+        if len(result):
+            rows = result.oscs.copy()           # cols == osc ids here
+            ops_r = result.ops.copy()
+            theta = result.decisions.theta.copy()
+            # epsilon-greedy: some rows explore a random θ instead.  The
+            # frozen arm runs the identical exploration schedule (same
+            # rng stream), so a frozen-vs-online comparison isolates the
+            # refits rather than mixing in an exploration tax.
+            explore = rng.random(len(rows)) < policy.explore_eps
+            if explore.any():
+                j = rng.integers(m, size=int(explore.sum()))
+                theta[explore] = np.asarray([configs[x] for x in j])
+                port.set_knobs_many(rows[explore], theta[explore, 0],
+                                    theta[explore, 1])
+                # keep the agent's view of the applied config honest
+                fleet._current[rows[explore]] = theta[explore]
+
+        if trainer is not None and len(result):
+            # feature rows of the *applied* θ, for next-interval labeling
+            from repro.core.metrics import feature_dim
+
+            hist_list = list(hist)
+            width = max(feature_dim(READ, fleet.k),
+                        feature_dim(WRITE, fleet.k))
+            feats = np.zeros((len(rows), width), dtype=np.float32)
+            fdims = {}
+            for op in (READ, WRITE):
+                sel = ops_r == op
+                if not sel.any():
+                    continue
+                F = fleet_feature_matrix(hist_list, op, rows[sel],
+                                         theta_feats)
+                js = np.asarray([SPACE.index_of(tuple(t))
+                                 for t in theta[sel]])
+                picked = F[np.arange(sel.sum()) * m + js]
+                fdims[op] = picked.shape[1]
+                feats[sel, :picked.shape[1]] = picked
+            tput0 = np.where(ops_r == READ, snap.read[rows, 0],
+                             snap.write[rows, 0])
+            pending = (rows, ops_r,
+                       _RowView(feats, fdims, ops_r), tput0)
+
+        if trainer is not None:
+            trainer.step(series[-1])
+
+    t_fail = _first_onset(spec)
+    ts = (np.arange(n_intervals) + 1) * interval
+    arr = np.asarray(series)
+    pre = arr[ts <= t_fail]
+    post = arr[ts > t_fail]
+    tail = post[len(post) // 2:]
+    changes = sum(int(r.decisions.changed.sum()) for r in fleet.decisions)
+    return ContinualResult(
+        scenario=spec.name,
+        online=online,
+        seconds=seconds,
+        interval=interval,
+        t_fail=t_fail,
+        tput_mbs=[float(x) for x in series],
+        refits=list(trainer.refits) if trainer else [],
+        samples={"read": n_samples[READ], "write": n_samples[WRITE]},
+        pre_fail_mbs=float(pre.mean()) if len(pre) else 0.0,
+        post_fail_mbs=float(post.mean()) if len(post) else float(arr.mean()),
+        post_tail_mbs=float(tail.mean()) if len(tail) else float(arr.mean()),
+        changes=changes,
+    )
+
+
+class _RowView:
+    """Op-sliced view over the mixed-op pending feature block: indexing
+    with a boolean row mask returns rows trimmed to that op's dim."""
+
+    def __init__(self, feats: np.ndarray, fdims: dict, ops: np.ndarray):
+        self._feats = feats
+        self._fdims = fdims
+        self._ops = ops
+
+    def __getitem__(self, sel):
+        op = int(self._ops[np.nonzero(sel)[0][0]])
+        return self._feats[sel, :self._fdims[op]]
+
+
+def run_comparison(name: str = "failing_ost", model: DIALModel | None = None,
+                   seconds: float = 45.0, interval: float = 0.5,
+                   policy: OnlinePolicy | None = None,
+                   gbdt_params: GBDTParams | None = None,
+                   seed_data: dict | None = None,
+                   seg_backend: str = "jax", smoke: bool = False) -> dict:
+    """Frozen-model vs online-refit on one drifting scenario.
+
+    Both runs start from the *same* forests (the online run swaps its
+    own copies, never mutating the originals), identical engine state,
+    and the identical epsilon-greedy exploration schedule, so the
+    throughput difference is attributable to the refits.  Defaults are
+    the calibrated failing_ost recovery configuration (10-interval
+    refit cadence, 10% exploration, 40x5 refit forests).
+    """
+    from repro.lab.evaluate import default_model
+
+    spec = get_scenario(name)
+    if model is None:
+        model = default_model(smoke=smoke)
+    policy = policy or OnlinePolicy(refit_every=10, min_samples=32,
+                                    cooldown=6, explore_eps=0.10)
+    gbdt_params = gbdt_params or GBDTParams(n_trees=40, max_depth=5)
+
+    def fresh():
+        return DIALModel(read_forest=model.read_forest,
+                         write_forest=model.write_forest,
+                         space=model.space, backend=model.backend,
+                         k=model.k)
+
+    frozen = run_continual(spec, fresh(), online=False, seconds=seconds,
+                           interval=interval, seg_backend=seg_backend)
+    online = run_continual(spec, fresh(), online=True, seconds=seconds,
+                           interval=interval, policy=policy,
+                           gbdt_params=gbdt_params, seed_data=seed_data,
+                           seg_backend=seg_backend)
+    gain = online.post_fail_mbs / max(frozen.post_fail_mbs, 1e-9)
+    tail_gain = online.post_tail_mbs / max(frozen.post_tail_mbs, 1e-9)
+    return {
+        "scenario": name,
+        "seconds": seconds,
+        "interval": interval,
+        "t_fail": frozen.t_fail if math.isfinite(frozen.t_fail) else None,
+        "frozen": frozen.row(),
+        "online": online.row(),
+        "post_fail_gain": gain,
+        "post_tail_gain": tail_gain,
+        "refits": len(online.refits),
+    }
+
+
+def write_report(report: dict, out_dir: str) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "continual.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    return path

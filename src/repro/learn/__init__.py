@@ -1,0 +1,34 @@
+"""On-device GBDT training (the learn layer).
+
+The offline trainer in :mod:`repro.core.gbdt` is a sequential numpy
+loop — fine for one overnight campaign, useless for continual in-lab
+retraining.  This package re-expresses the identical histogram-boosting
+algorithm as a fixed-shape array program:
+
+``boost``
+    grows a whole :class:`~repro.core.gbdt.DenseForest` under ``jit``
+    (``lax.scan`` over trees, level-synchronous ``lax.fori_loop`` over
+    depths, per-level reductions on
+    :mod:`repro.kernels.tree_histogram`) and ``vmap``-s over forests so
+    the read+write pair — or a whole hyperparameter sweep — trains in
+    one launch;
+``online``
+    fixed-capacity replay buffers, a throughput-drift trigger, and the
+    periodic-refit policy that lets a running lab scenario retrain its
+    model mid-flight (``python -m repro.lab continual``).
+"""
+
+from repro.learn.boost import (fit_forest, fit_forest_batch,
+                               train_models_jax)
+from repro.learn.online import (DriftDetector, OnlinePolicy, OnlineTrainer,
+                                ReplayBuffer)
+
+__all__ = [
+    "fit_forest",
+    "fit_forest_batch",
+    "train_models_jax",
+    "ReplayBuffer",
+    "DriftDetector",
+    "OnlinePolicy",
+    "OnlineTrainer",
+]

@@ -75,3 +75,86 @@ def test_pass_through_padding_semantics():
     clf = GBDTClassifier(GBDTParams(n_trees=10, max_depth=4)).fit(X, y)
     p = clf.predict_proba(X[:4])
     np.testing.assert_allclose(p, 0.5, atol=0.05)
+
+
+# ---------------------------------------------------------------------- #
+# edge cases, each pinned through a DenseForest save/load round trip and
+# mirrored against the jitted trainer (repro.learn.boost)
+# ---------------------------------------------------------------------- #
+def _roundtrip(forest, tmp_path, tag):
+    path = str(tmp_path / f"{tag}.npz")
+    forest.save(path)
+    loaded = DenseForest.load(path)
+    np.testing.assert_array_equal(loaded.feature, forest.feature)
+    np.testing.assert_array_equal(loaded.threshold, forest.threshold)
+    np.testing.assert_array_equal(loaded.leaf, forest.leaf)
+    return loaded
+
+
+def _both_trainers(X, y, params):
+    from repro.learn.boost import fit_forest
+
+    f_np = GBDTClassifier(params).fit(X, y).forest
+    f_jx = fit_forest(X, y, params)
+    np.testing.assert_array_equal(f_np.feature, f_jx.feature)
+    np.testing.assert_allclose(f_np.leaf, f_jx.leaf, atol=1e-5)
+    return f_np
+
+
+def test_constant_features_never_split(tmp_path):
+    """Constant columns have no valid split bin; trees must fall back to
+    pass-through spines without touching them."""
+    rng = np.random.default_rng(0)
+    X = np.column_stack([np.full(400, 3.25), rng.normal(size=400),
+                         np.full(400, -1.0)])
+    y = (X[:, 1] > 0).astype(float)
+    p = GBDTParams(n_trees=8, max_depth=3)
+    f = _both_trainers(X, y, p)
+    assert not ((f.feature == 0) & np.isfinite(f.threshold)).any()
+    assert not ((f.feature == 2) & np.isfinite(f.threshold)).any()
+    g = _roundtrip(f, tmp_path, "const")
+    acc = ((g.predict_proba(X) > 0.5) == y).mean()
+    assert acc > 0.9
+
+
+def test_single_class_labels(tmp_path):
+    """All-positive labels: no split has gain; prediction saturates at
+    the (clamped) base rate."""
+    rng = np.random.default_rng(1)
+    X = rng.normal(size=(300, 5))
+    y = np.ones(300)
+    p = GBDTParams(n_trees=6, max_depth=4)
+    f = _both_trainers(X, y, p)
+    g = _roundtrip(f, tmp_path, "oneclass")
+    assert (g.predict_proba(X[:32]) > 0.99).all()
+
+
+def test_fewer_samples_than_bins(tmp_path):
+    """n_samples < n_bins collapses quantile edges via dedup; both
+    trainers must agree and the forest must still fit the data."""
+    rng = np.random.default_rng(2)
+    X = rng.normal(size=(20, 3))
+    y = (X[:, 0] > 0).astype(float)
+    p = GBDTParams(n_trees=10, max_depth=3, n_bins=48, subsample=1.0,
+                   min_child_hess=0.1)
+    f = _both_trainers(X, y, p)
+    g = _roundtrip(f, tmp_path, "tiny")
+    acc = ((g.predict_proba(X) > 0.5) == y).mean()
+    assert acc == 1.0
+
+
+def test_depth_padding_pass_through_nodes(tmp_path):
+    """A rule needing only one split leaves deep levels as pass-through
+    (threshold=+inf descends left, spine carries the leaf value); the
+    dense traversal must still be exact after a save/load round trip."""
+    rng = np.random.default_rng(3)
+    X = rng.normal(size=(600, 4))
+    y = (X[:, 2] > 0.1).astype(float)
+    p = GBDTParams(n_trees=5, max_depth=5, subsample=1.0)
+    f = _both_trainers(X, y, p)
+    assert np.isinf(f.threshold).any()          # real pass-through nodes
+    g = _roundtrip(f, tmp_path, "passthrough")
+    np.testing.assert_array_equal(g.predict_margin(X),
+                                  f.predict_margin(X))
+    acc = ((g.predict_proba(X) > 0.5) == y).mean()
+    assert acc > 0.97

@@ -1,0 +1,254 @@
+"""The learn layer: histogram kernel oracle, trainer parity, online refit.
+
+Pins the three contracts the on-device training subsystem stands on:
+
+* every ``tree_histogram`` backend matches the ``np.bincount`` oracle
+  (<= 1e-6 relative), including the drop-id convention the
+  sibling-subtraction trick relies on;
+* the jitted trainer (``precision="exact"``) reproduces
+  ``GBDTClassifier`` split for split — identical features, thresholds
+  and leaves to <= 1e-5 — on fresh data, through the vmapped batch
+  path, and on a real (CI-sized) SIV-A campaign dataset, where the
+  ``fast`` float32 mode must also hold held-out AUC parity;
+* the online machinery (replay ring, drift detector, refit swap)
+  behaves, and a continual run collects labeled samples and refits a
+  live model mid-flight.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.gbdt import DenseForest, GBDTClassifier, GBDTParams
+from repro.kernels.tree_histogram.ops import tree_histogram
+from repro.kernels.tree_histogram.ref import tree_histogram_np
+from repro.learn.boost import fit_forest, fit_forest_batch
+from repro.learn.online import DriftDetector, OnlinePolicy, ReplayBuffer
+
+
+def _assert_forests_match(f1: DenseForest, f2: DenseForest,
+                          tol: float = 1e-5) -> None:
+    np.testing.assert_array_equal(f1.feature, f2.feature)
+    thr_ok = (np.isclose(f1.threshold, f2.threshold, atol=tol)
+              | (np.isinf(f1.threshold) & np.isinf(f2.threshold)))
+    assert thr_ok.all(), "thresholds diverge beyond tolerance"
+    np.testing.assert_allclose(f1.leaf, f2.leaf, atol=tol)
+    assert f1.base_score == pytest.approx(f2.base_score, abs=tol)
+    assert (f1.depth, f1.n_features) == (f2.depth, f2.n_features)
+
+
+def _toy(n=2500, d=10, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d))
+    y = ((X[:, 0] > 0.3) & (X[:, 1] < 0.5)
+         | (X[:, 2] * X[:, 3] > 1.0)).astype(float)
+    return X, y
+
+
+def _auc(scores, labels):
+    order = np.argsort(scores)
+    r = np.empty(len(scores))
+    r[order] = np.arange(1, len(scores) + 1)
+    pos = labels == 1
+    n_pos, n_neg = pos.sum(), (~pos).sum()
+    return (r[pos].sum() - n_pos * (n_pos + 1) / 2) / (n_pos * n_neg)
+
+
+# ---------------------------------------------------------------------- #
+# tree_histogram kernel vs oracle
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", ["jax", "matmul", "pallas_interpret"])
+def test_tree_histogram_matches_oracle(backend):
+    rng = np.random.default_rng(0)
+    n, F, n_nodes, n_bins, C = 2500, 7, 8, 12, 3
+    values = rng.normal(size=(C, n))
+    bins = rng.integers(0, n_bins, size=(n, F))
+    node = rng.integers(0, n_nodes, size=n)
+    oracle = tree_histogram_np(values, bins, node, n_nodes, n_bins)
+    got = np.asarray(tree_histogram(
+        values.astype(np.float32), bins, node, n_nodes, n_bins,
+        backend=backend))
+    scale = np.abs(oracle).max()
+    assert np.abs(got - oracle).max() / scale < 1e-6
+    # conservation: cells of any one feature sum to the channel totals
+    np.testing.assert_allclose(got[:, :, 0, :].sum(axis=(1, 2)),
+                               values.sum(axis=1), rtol=1e-6)
+
+
+@pytest.mark.parametrize("backend", ["jax", "matmul", "pallas_interpret"])
+def test_tree_histogram_drops_out_of_range_nodes(backend):
+    """The sibling-subtraction trick parks right-child samples on id
+    ``n_nodes``; every backend must drop them."""
+    rng = np.random.default_rng(1)
+    n, F, n_nodes, n_bins = 600, 3, 4, 8
+    values = rng.normal(size=(2, n))
+    bins = rng.integers(0, n_bins, size=(n, F))
+    node = rng.integers(0, n_nodes + 1, size=n)     # some on the drop id
+    oracle = tree_histogram_np(values, bins, node, n_nodes, n_bins)
+    got = np.asarray(tree_histogram(values, bins, node, n_nodes, n_bins,
+                                    backend=backend))
+    np.testing.assert_allclose(got, oracle, atol=1e-5)
+
+
+# ---------------------------------------------------------------------- #
+# trainer parity: jitted learn/boost vs the numpy loop
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", [0, 3])
+def test_fit_forest_reproduces_numpy_trainer(seed):
+    X, y = _toy(seed=seed)
+    p = GBDTParams(n_trees=25, max_depth=5, seed=seed)
+    f_np = GBDTClassifier(p).fit(X, y).forest
+    f_jx = fit_forest(X, y, p)
+    _assert_forests_match(f_np, f_jx)
+    np.testing.assert_allclose(f_np.predict_margin(X[:256]),
+                               f_jx.predict_margin(X[:256]), atol=1e-5)
+
+
+def test_fit_forest_batch_pads_and_matches():
+    """Read/write-shaped pair (different n and F) in one vmapped launch."""
+    rng = np.random.default_rng(42)
+    Xa = rng.normal(size=(900, 8))
+    ya = (Xa[:, 0] > 0).astype(float)
+    Xb = rng.normal(size=(1300, 12))
+    yb = (Xb[:, 1] + Xb[:, 2] > 0.5).astype(float)
+    p = GBDTParams(n_trees=15, max_depth=4)
+    fa, fb = fit_forest_batch([(Xa, ya), (Xb, yb)], p)
+    _assert_forests_match(GBDTClassifier(p).fit(Xa, ya).forest, fa)
+    _assert_forests_match(GBDTClassifier(p).fit(Xb, yb).forest, fb)
+
+
+def test_fit_forest_batch_sweeps_continuous_hyperparams():
+    """Per-forest learning rates ride the vmap; each element matches its
+    own sequential fit."""
+    X, y = _toy(n=1200, seed=5)
+    plist = [GBDTParams(n_trees=10, max_depth=4, learning_rate=lr)
+             for lr in (0.05, 0.2)]
+    out = fit_forest_batch([(X, y), (X, y)], plist)
+    for p, f in zip(plist, out):
+        _assert_forests_match(GBDTClassifier(p).fit(X, y).forest, f)
+
+
+def test_campaign_dataset_parity_and_fast_auc():
+    """On a real SIV-A campaign dataset: exact mode matches the numpy
+    trainer split for split; fast (float32) mode holds held-out AUC."""
+    from repro.lab.campaign import CampaignConfig, SMOKE_GRID, collect_batch
+
+    cfg = CampaignConfig(seconds=10.0, reps=1, grid=SMOKE_GRID,
+                         contention_frac=0.5, seed=3)
+    data = collect_batch(cfg)
+    X, y = data["read"]
+    assert len(X) >= 40, "campaign produced too few read samples"
+    cut = int(0.7 * len(X))
+    Xtr, ytr, Xte, yte = X[:cut], y[:cut], X[cut:], y[cut:]
+    p = GBDTParams(n_trees=30, max_depth=4)
+    f_np = GBDTClassifier(p).fit(Xtr, ytr).forest
+    _assert_forests_match(f_np, fit_forest(Xtr, ytr, p))
+    if len(set(yte)) == 2:
+        f_fast = fit_forest(Xtr, ytr, p, precision="fast")
+        a_np = _auc(f_np.predict_margin(Xte), yte)
+        a_fast = _auc(f_fast.predict_margin(Xte), yte)
+        assert abs(a_np - a_fast) < 0.1
+
+
+def test_fast_mode_statistical_parity():
+    X, y = _toy(n=3000, seed=9)
+    p = GBDTParams(n_trees=30, max_depth=5)
+    f_np = GBDTClassifier(p).fit(X[:2000], y[:2000]).forest
+    f_fast = fit_forest(X[:2000], y[:2000], p, precision="fast")
+    a_np = _auc(f_np.predict_margin(X[2000:]), y[2000:])
+    a_fast = _auc(f_fast.predict_margin(X[2000:]), y[2000:])
+    assert a_fast > 0.9
+    assert abs(a_np - a_fast) < 0.05
+
+
+# ---------------------------------------------------------------------- #
+# online machinery
+# ---------------------------------------------------------------------- #
+def test_replay_buffer_ring_semantics():
+    buf = ReplayBuffer(capacity=8, dim=3)
+    buf.add(np.ones((5, 3)), np.arange(5))
+    assert len(buf) == 5
+    buf.add(2 * np.ones((6, 3)), np.arange(5, 11))   # wraps
+    assert len(buf) == 8
+    X, y = buf.dataset()
+    assert X.shape == (8, 3)
+    assert set(y) == set(range(3, 11))               # oldest 3 evicted
+    # oversized insert keeps only the newest capacity rows
+    buf.add(np.arange(30).reshape(10, 3), np.arange(100, 110))
+    X, y = buf.dataset()
+    assert len(buf) == 8 and set(y) == set(range(102, 110))
+
+
+def test_drift_detector_fires_on_collapse():
+    det = DriftDetector(fast=0.5, slow=0.08, drop_frac=0.75, warmup=4)
+    assert not any(det.update(100.0) for _ in range(10))
+    fired = [det.update(10.0) for _ in range(4)]
+    assert any(fired)
+    det.reset(10.0)
+    assert not any(det.update(10.0) for _ in range(10))
+
+
+def test_online_trainer_refits_and_swaps_forests():
+    from repro.core.metrics import feature_dim
+    from repro.core.model import DIALModel
+    from repro.learn.online import OnlineTrainer
+    from repro.pfs.engine import READ, WRITE
+
+    rng = np.random.default_rng(0)
+
+    def forest(op):
+        dim = feature_dim(op, 1)
+        X = rng.normal(size=(300, dim))
+        y = (X[:, 0] > 0).astype(float)
+        return GBDTClassifier(GBDTParams(n_trees=5, max_depth=3)
+                              ).fit(X, y).forest
+
+    model = DIALModel(read_forest=forest(READ), write_forest=forest(WRITE))
+    old_read = model.read_forest
+    trainer = OnlineTrainer(model,
+                            GBDTParams(n_trees=6, max_depth=3),
+                            policy=OnlinePolicy(refit_every=3,
+                                                min_samples=32,
+                                                cooldown=1))
+    dim = feature_dim(READ, 1)
+    X = rng.normal(size=(64, dim))
+    y = (X[:, 1] > 0).astype(float)
+    trainer.observe(READ, X, y)
+    recs = [trainer.step(100.0) for _ in range(4)]
+    fired = [r for r in recs if r]
+    assert len(fired) == 1 and fired[0]["ops"] == ["read"]
+    assert model.read_forest is not old_read       # swapped in place
+    assert model._jax_fns == {}                    # predictor cache cleared
+    # write buffer was empty -> write forest untouched
+    assert trainer.buffers[WRITE].dataset()[0].shape[0] == 0
+
+
+def test_continual_run_collects_and_refits():
+    """A short failing_ost run labels its own decisions and refits the
+    live model; the frozen twin runs the identical loop untouched."""
+    from repro.core.metrics import feature_dim
+    from repro.core.model import DIALModel
+    from repro.lab.continual import run_continual
+    from repro.lab.scenarios import get_scenario
+    from repro.pfs.engine import READ, WRITE
+
+    rng = np.random.default_rng(1)
+
+    def forest(op):
+        dim = feature_dim(op, 1)
+        X = rng.normal(size=(400, dim))
+        y = (X[:, 0] + 0.2 * rng.normal(size=400) > 0).astype(float)
+        return GBDTClassifier(GBDTParams(n_trees=8, max_depth=3)
+                              ).fit(X, y).forest
+
+    spec = get_scenario("failing_ost")
+    model = DIALModel(read_forest=forest(READ), write_forest=forest(WRITE))
+    res = run_continual(
+        spec, model, online=True, seconds=6.0, interval=0.5,
+        policy=OnlinePolicy(refit_every=6, min_samples=8, cooldown=2,
+                            explore_eps=0.3),
+        gbdt_params=GBDTParams(n_trees=5, max_depth=3), seed=0)
+    assert len(res.tput_mbs) == 12
+    assert res.samples["read"] > 0            # labeled its own decisions
+    assert res.refits, "no refit fired in the continual run"
+    assert res.t_fail == 3.0
+    assert res.pre_fail_mbs > res.post_fail_mbs   # the OST did fail

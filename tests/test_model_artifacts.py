@@ -84,3 +84,59 @@ def test_load_versioned_missing_raises(tmp_path):
 
     with pytest.raises(FileNotFoundError):
         load_versioned(str(tmp_path / "nothing"))
+
+
+def test_train_meta_roundtrip_and_backend_parity(tmp_path, forests):
+    """train_models records provenance (backend + dataset fingerprint)
+    for both training paths, and DIALModel.save/load round-trips it."""
+    from repro.core.dataset import train_models
+
+    fr, fw, X = forests
+    rng = np.random.default_rng(7)
+    n, dim = 300, 12
+    Xd = rng.normal(size=(n, dim)).astype(np.float32)
+    data = {"read": (Xd, (Xd[:, 0] > 0).astype(float)),
+            "write": (Xd, (Xd[:, 1] > 0).astype(float))}
+    params = GBDTParams(n_trees=10, max_depth=3)
+    m_np = train_models(data, params, backend="numpy")
+    m_jx = train_models(data, params, backend="jax")
+    assert m_np.train_meta["trainer_backend"] == "numpy"
+    assert m_jx.train_meta["trainer_backend"] == "jax"
+    # same data -> same fingerprint; parity-grade training -> same forests
+    assert m_np.train_meta["dataset"] == m_jx.train_meta["dataset"]
+    assert m_np.train_meta["dataset"]["rows"] == {"read": n, "write": n}
+    np.testing.assert_array_equal(m_np.read_forest.feature,
+                                  m_jx.read_forest.feature)
+    np.testing.assert_allclose(m_np.read_forest.leaf,
+                               m_jx.read_forest.leaf, atol=1e-5)
+
+    prefix = str(tmp_path / "dial")
+    m_jx.save(prefix)
+    loaded = DIALModel.load(prefix)
+    assert loaded.train_meta == m_jx.train_meta
+
+
+def test_versioned_artifact_refuses_mismatched_forests(tmp_path, forests):
+    """The strict loader cross-checks manifest vs model provenance, so
+    forests swapped underneath a campaign manifest are refused."""
+    import json
+    import os
+
+    from repro.lab.campaign import load_versioned, save_versioned
+
+    fr, fw, X = forests
+    meta = {"trainer_backend": "jax",
+            "dataset": {"rows": {"read": 10, "write": 10}, "sha256": "aa"}}
+    model = DIALModel(read_forest=fr, write_forest=fw, train_meta=meta)
+    root = str(tmp_path / "models")
+    d = save_versioned(model, root, meta={"train_meta": meta})
+    assert load_versioned(root) is not None      # consistent -> loads
+
+    # tamper: rewrite the model meta as if trained on other data
+    with open(os.path.join(d, "dial.meta.json"), "w") as f:
+        json.dump({"trainer_backend": "numpy",
+                   "dataset": {"rows": {"read": 99, "write": 1},
+                               "sha256": "bb"}}, f)
+    with pytest.raises(ValueError, match="inconsistent"):
+        load_versioned(root)
+    assert load_versioned(root, strict=False) is not None
