@@ -263,13 +263,32 @@ def load_versioned(root: str = "models/lab", version: str | None = None,
         raise FileNotFoundError(f"no campaign artifacts under {root!r}")
     d = os.path.join(root, v)
     model = DIALModel.load(os.path.join(d, "dial"), backend=backend)
-    if strict and model.train_meta:
+    if strict:
+        manifest_meta = None
+        manifest_ok = True
         try:
             with open(os.path.join(d, "manifest.json")) as f:
                 manifest_meta = json.load(f).get("train_meta")
         except (OSError, ValueError):
-            manifest_meta = None
+            manifest_ok = False
+        if not manifest_ok and model.train_meta:
+            # the mirror of the missing-dial.meta case below: the model
+            # carries provenance but the manifest that should confirm it
+            # is gone/unreadable (save_versioned always writes one)
+            raise ValueError(
+                f"artifact {d!r} is inconsistent: the model carries "
+                "train_meta but manifest.json is missing or unreadable "
+                "(pass strict=False to override)")
         if manifest_meta is not None and manifest_meta != model.train_meta:
+            # DIALModel.load maps a missing/corrupt dial.meta.json to {} —
+            # that is exactly the partial-copy/tamper case, not a pass
+            if not model.train_meta:
+                raise ValueError(
+                    f"artifact {d!r} is inconsistent: manifest carries "
+                    "train_meta but the model's dial.meta.json is missing "
+                    "or unreadable (forests on disk do not match the "
+                    "campaign that wrote the manifest; pass strict=False "
+                    "to override)")
             raise ValueError(
                 f"artifact {d!r} is inconsistent: manifest train_meta "
                 f"{manifest_meta} != model meta {model.train_meta} "

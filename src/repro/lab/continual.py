@@ -54,6 +54,7 @@ class ContinualResult:
     interval: float
     t_fail: float                 # first disturbance onset (inf if none)
     tput_mbs: list                # per-interval fleet MB/s
+    theta_trace: list             # per-interval checksum of applied θ
     refits: list                  # OnlineTrainer refit records
     samples: dict                 # labeled rows collected per op
     pre_fail_mbs: float
@@ -73,11 +74,11 @@ def _first_onset(spec: ScenarioSpec) -> float:
 def run_continual(spec: ScenarioSpec, model: DIALModel, *,
                   online: bool = True, seconds: float = 30.0,
                   interval: float = 0.5,
-                  policy: OnlinePolicy = OnlinePolicy(),
+                  policy: OnlinePolicy | None = None,
                   gbdt_params: GBDTParams | None = None,
                   seed_data: dict | None = None,
                   seg_backend: str = "jax",
-                  tuner_params: TunerParams = TunerParams(),
+                  tuner_params: TunerParams | None = None,
                   seed: int = 0) -> ContinualResult:
     """Drive one scenario with DIAL tuning and (optionally) online refit.
 
@@ -87,6 +88,8 @@ def run_continual(spec: ScenarioSpec, model: DIALModel, *,
     next interval's throughput ratio.
     """
     rng = np.random.default_rng(seed)
+    policy = policy if policy is not None else OnlinePolicy()
+    tuner_params = tuner_params if tuner_params is not None else TunerParams()
     batch = stack_scenarios([build(spec)])
     port = BatchPort(batch)
     fleet = FleetAgent(port, model, tuner_params=tuner_params)
@@ -108,6 +111,7 @@ def run_continual(spec: ScenarioSpec, model: DIALModel, *,
     hist: collections.deque = collections.deque(maxlen=fleet.k + 1)
     pending = None       # (rows, ops, feats, tput) awaiting next label
     series: list[float] = []
+    theta_trace: list[float] = []
     n_samples = {READ: 0, WRITE: 0}
 
     for _ in range(n_intervals):
@@ -159,6 +163,12 @@ def run_continual(spec: ScenarioSpec, model: DIALModel, *,
                                     theta[explore, 1])
                 # keep the agent's view of the applied config honest
                 fleet._current[rows[explore]] = theta[explore]
+            # position-weighted checksum of the applied (row, θ) block —
+            # frozen/online traces must agree until the first refit
+            w = np.arange(theta.size, dtype=np.float64) + 1.0
+            theta_trace.append(float(theta.ravel() @ w + float(rows.sum())))
+        else:
+            theta_trace.append(0.0)
 
         if trainer is not None and len(result):
             # feature rows of the *applied* θ, for next-interval labeling
@@ -202,6 +212,7 @@ def run_continual(spec: ScenarioSpec, model: DIALModel, *,
         interval=interval,
         t_fail=t_fail,
         tput_mbs=[float(x) for x in series],
+        theta_trace=theta_trace,
         refits=list(trainer.refits) if trainer else [],
         samples={"read": n_samples[READ], "write": n_samples[WRITE]},
         pre_fail_mbs=float(pre.mean()) if len(pre) else 0.0,
@@ -255,8 +266,12 @@ def run_comparison(name: str = "failing_ost", model: DIALModel | None = None,
                          space=model.space, backend=model.backend,
                          k=model.k)
 
+    # the frozen arm gets the same policy: only explore_eps is consulted
+    # when online=False, so both arms draw the identical epsilon-greedy
+    # exploration schedule from the same rng stream
     frozen = run_continual(spec, fresh(), online=False, seconds=seconds,
-                           interval=interval, seg_backend=seg_backend)
+                           interval=interval, policy=policy,
+                           seg_backend=seg_backend)
     online = run_continual(spec, fresh(), online=True, seconds=seconds,
                            interval=interval, policy=policy,
                            gbdt_params=gbdt_params, seed_data=seed_data,

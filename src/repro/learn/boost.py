@@ -402,7 +402,12 @@ def fit_forest(X: np.ndarray, y: np.ndarray,
     hist_backend = _check_hist_backend(hist_backend, precision)
     ds = bin_dataset(X, y, p.n_bins)
     masks = subsample_masks(p, ds.n_rows, ds.n_rows)
-    perm, bnd = sort_structs(ds.Xb, p.n_bins)
+    if hist_backend == "cumsum":
+        perm, bnd = sort_structs(ds.Xb, p.n_bins)
+    else:
+        # unused traced args on the other strategies — don't pay the
+        # O(n F log n) argsort (this runs on every online refit)
+        perm = bnd = np.zeros((1, 1), dtype=np.int32)
     grow = _make_grow_fn(p.max_depth, hist_backend, False, precision)
     with _x64_ctx(precision):
         out = grow(ds.Xb, ds.edges_pad, ds.bin_count, ds.y, ds.valid,
@@ -450,9 +455,14 @@ def fit_forest_batch(datasets, params: GBDTParams | list | None = None,
     padded = [pad_dataset(ds, n, n_feat) for ds in binned]
     masks = np.stack([subsample_masks(p, ds.n_rows, n)
                       for ds, p in zip(binned, plist)])
-    sorts = [sort_structs(ds.Xb, p0.n_bins) for ds in padded]
-    perm = np.stack([s[0] for s in sorts])
-    bnd = np.stack([s[1] for s in sorts])
+    if hist_backend == "cumsum":
+        sorts = [sort_structs(ds.Xb, p0.n_bins) for ds in padded]
+        perm = np.stack([s[0] for s in sorts])
+        bnd = np.stack([s[1] for s in sorts])
+    else:
+        # unused traced args on the other strategies (vmap only needs
+        # the leading batch axis) — skip the per-forest argsorts
+        perm = bnd = np.zeros((len(padded), 1, 1), dtype=np.int32)
 
     def stack(attr):
         return np.stack([getattr(ds, attr) for ds in padded])

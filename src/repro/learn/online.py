@@ -125,24 +125,24 @@ class OnlineTrainer:
     """
 
     def __init__(self, model, gbdt_params: GBDTParams | None = None,
-                 policy: OnlinePolicy = OnlinePolicy(),
+                 policy: OnlinePolicy | None = None,
                  hist_backend: str = "matmul", precision: str = "fast"):
         from repro.core.metrics import feature_dim
 
         self.model = model
         self.params = gbdt_params or GBDTParams(n_trees=40, max_depth=5)
-        self.policy = policy
+        self.policy = policy if policy is not None else OnlinePolicy()
         self.hist_backend = hist_backend
         # float32 training is the production refit configuration: a live
         # run needs refit latency, not bit-parity with the numpy loop
         self.precision = precision
-        self.buffers = {op: ReplayBuffer(policy.capacity,
+        self.buffers = {op: ReplayBuffer(self.policy.capacity,
                                          feature_dim(op, model.k))
                         for op in (READ, WRITE)}
-        self.detector = DriftDetector(fast=policy.drift_fast,
-                                      slow=policy.drift_slow,
-                                      drop_frac=policy.drift_drop_frac,
-                                      warmup=policy.drift_warmup)
+        self.detector = DriftDetector(fast=self.policy.drift_fast,
+                                      slow=self.policy.drift_slow,
+                                      drop_frac=self.policy.drift_drop_frac,
+                                      warmup=self.policy.drift_warmup)
         self._interval = 0
         # periodic cadence and cooldown both count from the run start, so
         # the first refit cannot fire on a handful of warmup samples

@@ -140,3 +140,60 @@ def test_versioned_artifact_refuses_mismatched_forests(tmp_path, forests):
     with pytest.raises(ValueError, match="inconsistent"):
         load_versioned(root)
     assert load_versioned(root, strict=False) is not None
+
+
+def test_versioned_artifact_refuses_missing_or_corrupt_meta(tmp_path,
+                                                            forests):
+    """Deleting or truncating dial.meta.json must not bypass the strict
+    guard when the manifest still carries train_meta (the partial-copy /
+    tamper case the guard exists for)."""
+    import os
+
+    from repro.lab.campaign import load_versioned, save_versioned
+
+    fr, fw, X = forests
+    meta = {"trainer_backend": "jax",
+            "dataset": {"rows": {"read": 10, "write": 10}, "sha256": "aa"}}
+    model = DIALModel(read_forest=fr, write_forest=fw, train_meta=meta)
+    root = str(tmp_path / "models")
+    d = save_versioned(model, root, meta={"train_meta": meta})
+    meta_path = os.path.join(d, "dial.meta.json")
+
+    # truncated/corrupt meta -> refused
+    with open(meta_path, "w") as f:
+        f.write('{"trainer_backend":')
+    with pytest.raises(ValueError, match="missing or unreadable"):
+        load_versioned(root)
+
+    # missing meta -> refused
+    os.remove(meta_path)
+    with pytest.raises(ValueError, match="missing or unreadable"):
+        load_versioned(root)
+    assert load_versioned(root, strict=False) is not None
+
+
+def test_versioned_artifact_refuses_missing_or_corrupt_manifest(tmp_path,
+                                                                forests):
+    """The manifest side of the same contract: a model carrying
+    provenance whose manifest.json is gone or truncated is refused."""
+    import os
+
+    from repro.lab.campaign import load_versioned, save_versioned
+
+    fr, fw, X = forests
+    meta = {"trainer_backend": "jax",
+            "dataset": {"rows": {"read": 10, "write": 10}, "sha256": "aa"}}
+    model = DIALModel(read_forest=fr, write_forest=fw, train_meta=meta)
+    root = str(tmp_path / "models")
+    d = save_versioned(model, root, meta={"train_meta": meta})
+    man_path = os.path.join(d, "manifest.json")
+
+    with open(man_path, "w") as f:
+        f.write('{"version":')
+    with pytest.raises(ValueError, match="manifest.json is missing"):
+        load_versioned(root)
+
+    os.remove(man_path)
+    with pytest.raises(ValueError, match="manifest.json is missing"):
+        load_versioned(root)
+    assert load_versioned(root, strict=False) is not None
