@@ -1,6 +1,6 @@
 PY ?= python
 
-.PHONY: verify deps bench-fleet bench-train bench-json lab-smoke continual-smoke
+.PHONY: verify deps bench-fleet bench-train bench-loop bench-json lab-smoke continual-smoke
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -14,6 +14,9 @@ bench-fleet:
 
 bench-train:
 	PYTHONPATH=src $(PY) benchmarks/train_scaling.py --quick
+
+bench-loop:
+	PYTHONPATH=src $(PY) benchmarks/loop_scaling.py --quick
 
 # full benchmark sweep + machine-readable perf record
 bench-json:

@@ -33,6 +33,7 @@ def main(argv=None) -> None:
     import benchmarks.fig3_dlio as fig3
     import benchmarks.fleet_scaling as fleet
     import benchmarks.lab_scaling as labsc
+    import benchmarks.loop_scaling as loopsc
     import benchmarks.sim_scaling as simsc
     import benchmarks.table2_h5bench as t2
     import benchmarks.table3_overhead as t3
@@ -86,6 +87,14 @@ def main(argv=None) -> None:
             {"seq_sim_s_per_s": round(rl["seq_scenario_s_per_s"], 1),
              "batch_sim_s_per_s": round(rl["batch_scenario_s_per_s"], 1),
              "speedup": round(rl["speedup"], 1)})
+
+    t0 = time.time()
+    rlp = loopsc.bench(256)
+    el = (time.time() - t0) * 1e6
+    _record(records, "loop_scaling", el,
+            {"host_loop_ips": round(rlp["host_numpy_ips"], 2),
+             "fused_ips": round(rlp["fused_ips"], 2),
+             "speedup_vs_host_loop": round(rlp["speedup_vs_host_numpy"], 1)})
 
     t0 = time.time()
     rt = trainsc.bench(16)

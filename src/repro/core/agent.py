@@ -103,7 +103,7 @@ class DIALAgent:
         port: ClientPort,
         model: DIALModel,
         space: ConfigSpace = SPACE,
-        tuner_params: TunerParams = TunerParams(),
+        tuner_params: TunerParams | None = None,
         k: int = 1,
         min_volume_bytes: float = 256 * 1024,
         warmup_intervals: int = 2,
@@ -114,7 +114,8 @@ class DIALAgent:
         self.port = port
         self.model = model
         self.space = space
-        self.tuner_params = tuner_params
+        self.tuner_params = (tuner_params if tuner_params is not None
+                             else TunerParams())
         self.k = k
         self.min_volume = min_volume_bytes
         self.warmup = warmup_intervals
@@ -177,7 +178,7 @@ class ReferenceLoopAgent:
         port: ClientPort,
         model: DIALModel,
         space: ConfigSpace = SPACE,
-        tuner_params: TunerParams = TunerParams(),
+        tuner_params: TunerParams | None = None,
         k: int = 1,
         min_volume_bytes: float = 256 * 1024,
         warmup_intervals: int = 2,
@@ -186,7 +187,8 @@ class ReferenceLoopAgent:
         self.port = port
         self.model = model
         self.space = space
-        self.tuner_params = tuner_params
+        self.tuner_params = (tuner_params if tuner_params is not None
+                             else TunerParams())
         self.k = k
         self.min_volume = min_volume_bytes
         # skip decisions until the workload's startup transient has passed:
@@ -218,6 +220,10 @@ class ReferenceLoopAgent:
             snap = snapshot(self._prev[osc], cur)
             self._prev[osc] = cur
             self._hist[osc].append(snap)
+            # the applied configuration comes from the probe, never a
+            # shadow copy — same contract as FleetAgent (knobs can be
+            # flipped out-of-band between ticks)
+            self._current[osc] = (cur.window_pages, cur.rpcs_in_flight)
             t1 = time.perf_counter()
             if len(self._hist[osc]) < self.k + 1 or self._ticks <= self.warmup + self.k:
                 continue
@@ -257,7 +263,7 @@ class ReferenceLoopAgent:
 def run_with_agents(sim, model: DIALModel, clients: list[int],
                     seconds: float, interval: float = 0.5,
                     measure_overhead: bool = False,
-                    tuner_params: TunerParams = TunerParams()):
+                    tuner_params: TunerParams | None = None):
     """Drive the simulator with autonomous DIAL tuning on ``clients``.
 
     Delegates to the fleet path: all listed clients' interfaces tick as
@@ -277,7 +283,7 @@ def run_with_agents(sim, model: DIALModel, clients: list[int],
 def run_with_loop_agents(sim, model: DIALModel, clients: list[int],
                          seconds: float, interval: float = 0.5,
                          measure_overhead: bool = False,
-                         tuner_params: TunerParams = TunerParams()) -> list:
+                         tuner_params: TunerParams | None = None) -> list:
     """Reference driver: one :class:`ReferenceLoopAgent` per client.
 
     Kept for the fleet/loop equivalence tests and scaling benchmarks;

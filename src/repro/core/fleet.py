@@ -140,13 +140,18 @@ class FleetTickResult:
                 for i in range(len(self.oscs))]
 
 
-_EMPTY = FleetTickResult(
-    oscs=np.zeros(0, dtype=np.int64), ops=np.zeros(0, dtype=np.int64),
-    decisions=FleetDecisions(theta=np.zeros((0, 2), dtype=np.int64),
-                             changed=np.zeros(0, dtype=bool),
-                             n_candidates=np.zeros(0, dtype=np.int64),
-                             score=np.zeros(0),
-                             probs=np.zeros((0, len(SPACE)))))
+def empty_tick_result(n_configs: int = len(SPACE)) -> FleetTickResult:
+    """A fresh gated-tick result.  Never share one module-level instance:
+    result arrays are reachable by every caller (and mutable), so a
+    shared empty would alias state across agents — e.g. between the
+    frozen and online arms of a continual comparison."""
+    return FleetTickResult(
+        oscs=np.zeros(0, dtype=np.int64), ops=np.zeros(0, dtype=np.int64),
+        decisions=FleetDecisions(theta=np.zeros((0, 2), dtype=np.int64),
+                                 changed=np.zeros(0, dtype=bool),
+                                 n_candidates=np.zeros(0, dtype=np.int64),
+                                 score=np.zeros(0),
+                                 probs=np.zeros((0, n_configs))))
 
 
 class FleetAgent:
@@ -159,7 +164,7 @@ class FleetAgent:
         port: FleetPort,
         model: DIALModel,
         space: ConfigSpace = SPACE,
-        tuner_params: TunerParams = TunerParams(),
+        tuner_params: TunerParams | None = None,
         k: int = 1,
         min_volume_bytes: float = 256 * 1024,
         warmup_intervals: int = 2,
@@ -170,7 +175,8 @@ class FleetAgent:
         self.port = port
         self.model = model
         self.space = space
-        self.tuner_params = tuner_params
+        self.tuner_params = (tuner_params if tuner_params is not None
+                             else TunerParams())
         self.k = k
         self.min_volume = min_volume_bytes
         self.warmup = warmup_intervals
@@ -190,6 +196,13 @@ class FleetAgent:
         self.decisions: list = []
 
     # ------------------------------------------------------------------ #
+    def _gated(self) -> FleetTickResult:
+        """Record and return a fresh empty result for a no-decision tick,
+        keeping ``decisions[i]`` aligned with interval index ``i``."""
+        result = empty_tick_result(len(self.space))
+        self.decisions.append(result)
+        return result
+
     def tick(self) -> FleetTickResult:
         """One tuning round across every interface — one batch per stage."""
         self._ticks += 1
@@ -198,9 +211,16 @@ class FleetAgent:
         snap = snapshot_all(self._prev, cur)
         self._prev = cur
         self._hist.append(snap)
+        # the *applied* configuration comes from the probe itself, never
+        # from a shadow copy: knobs may have changed out-of-band since
+        # our last write (ε-greedy exploration, campaign explore/label
+        # alternation), and Algorithm 1's `current` / `changed` must see
+        # what is actually in effect
+        self._current = np.stack(
+            [cur.window_pages, cur.rpcs_in_flight], axis=1).astype(np.int64)
         t1 = time.perf_counter()
         if len(self._hist) < self.k + 1 or self._ticks <= self.warmup + self.k:
-            return _EMPTY
+            return self._gated()
 
         # per-interface gating, all as masks (same predicates as the loop)
         vol_r, vol_w = snap.read_volume, snap.write_volume
@@ -213,7 +233,7 @@ class FleetAgent:
         steady = (ratio >= 0.5) & (ratio <= 2.0)          # burst guard
         rows = np.nonzero(active & steady)[0]
         if rows.size == 0:
-            return _EMPTY
+            return self._gated()
 
         # one feature matrix per op group, one fused model launch
         history = list(self._hist)
@@ -268,26 +288,66 @@ class FleetAgent:
                 tm.inference_ms.append(inf_ms)
                 tm.end_to_end_ms.append(e2e_ms)
 
+    # ------------------------------------------------------------------ #
+    def ingest_fused(self, result) -> None:
+        """Adopt a :class:`~repro.pfs.loop_jax.FusedLoopResult` as this
+        agent's history: ``decisions`` gets one record per interval
+        (same alignment as :meth:`tick`), the probe/current state
+        re-syncs from the post-run port, and the snapshot history deque
+        refills from the run's final in-scan ring — so further host
+        ticks decide exactly as if every interval had run on the host.
+        """
+        from repro.core.metrics import FleetSnapshot
+
+        self.decisions.extend(result.decisions)
+        self._ticks += result.n_intervals
+        st = self.port.probe_all()
+        self._prev = st
+        self._current = np.stack(
+            [st.window_pages, st.rpcs_in_flight], axis=1).astype(np.int64)
+        if result.hist is None or np.asarray(result.hist[0]).ndim != 3:
+            return                              # untuned or batched run
+        hr, hw, hrv, hwv = result.hist          # (k+1, n_all, F) rings
+        rows = self.oscs                        # this agent's subset
+        kp1 = hr.shape[0]
+        # ring slots older than the run's interval count are still the
+        # zero-initialized placeholders — only adopt real snapshots
+        valid = min(result.n_intervals, kp1)
+        for j in range(kp1 - valid, kp1):
+            age = kp1 - 1 - j                   # intervals before "now"
+            self._hist.append(FleetSnapshot(
+                t=st.t - age * result.interval_seconds,
+                dt=result.interval_seconds,
+                oscs=rows,
+                read=hr[j][rows], write=hw[j][rows],
+                read_volume=hrv[j][rows], write_volume=hwv[j][rows]))
+
 
 def run_fleet(sim, model: DIALModel, oscs=None, seconds: float = 10.0,
               interval: float = 0.5, measure_overhead: bool = False,
-              tuner_params: TunerParams = TunerParams(),
+              tuner_params: TunerParams | None = None,
               backend: str = "numpy", seg_backend: str = "auto") -> FleetAgent:
     """Drive the simulator with one fleet agent over ``oscs`` (default
     all interfaces) — the batched counterpart of ``run_with_agents``.
 
-    ``backend`` selects the engine execution layer between tuning ticks:
+    ``backend`` selects the execution layer:
 
     * ``"numpy"`` — the historical Python tick loop (``sim.step()`` per
-      tick, legacy Workload objects depositing demand);
+      tick, legacy Workload objects depositing demand), tuning on host;
     * ``"jax"``   — the fused interval path: the attached workloads are
       frozen into a :class:`~repro.pfs.workloads.WorkloadTable` and each
       whole interval advances through one jitted ``lax.scan``
       (:class:`~repro.pfs.engine_jax.FusedEngine`), with per-OST/client
-      reductions on the shared segment-sum kernel (``seg_backend``).
+      reductions on the shared segment-sum kernel (``seg_backend``);
+      tuning still runs per interval on the host;
+    * ``"jax-fused"`` — the device-resident loop
+      (:class:`~repro.pfs.loop_jax.FusedLoop`): engine **and** the whole
+      decision path (snapshot differencing, featurization, forest
+      scoring, Algorithm 1, knob write-back) execute as one jitted
+      dispatch covering every interval of the run.
 
-    Probing, tuning, and knob actuation are identical in both cases —
-    the fleet agent reads and writes the same ``SimState``.
+    Decisions and knob trajectories are identical on every backend —
+    only the execution schedule changes (tests/test_loop_fused.py).
     """
     fleet = FleetAgent(SimFleetPort(sim, oscs), model,
                        tuner_params=tuner_params,
@@ -311,6 +371,31 @@ def run_fleet(sim, model: DIALModel, oscs=None, seconds: float = 10.0,
             sim.state, wstate = engine.run_interval(sim.state, wstate)
             fleet.tick()
         sync_workloads_from_table(sim, wstate)
+    elif backend == "jax-fused":
+        from repro.pfs.loop_jax import FusedLoop
+        from repro.pfs.workloads import (sync_workloads_from_table,
+                                         table_from_sim)
+
+        if measure_overhead:
+            raise ValueError(
+                "measure_overhead requires per-interval host timing; "
+                "inside the single fused dispatch there is nothing to "
+                "time per stage — use backend='numpy' or 'jax' "
+                "(benchmarks/loop_scaling.py measures the fused path "
+                "end to end)")
+        table, wstate = table_from_sim(sim)
+        loop = FusedLoop(sim.params, sim.topo, steps_per_interval, model,
+                         space=fleet.space, tuner_params=fleet.tuner_params,
+                         k=fleet.k, min_volume_bytes=fleet.min_volume,
+                         warmup_intervals=fleet.warmup,
+                         seg_backend=seg_backend)
+        tune_mask = np.zeros(sim.n_osc, dtype=bool)
+        tune_mask[fleet.oscs] = True
+        result = loop.run(table, sim.state, wstate, n_intervals,
+                          tune_mask=tune_mask)
+        sim.state = result.state
+        sync_workloads_from_table(sim, result.wstate)
+        fleet.ingest_fused(result)
     else:
         raise ValueError(f"unknown engine backend {backend!r}")
     return fleet

@@ -191,22 +191,43 @@ class FleetSnapshot:
                         write_volume=float(self.write_volume[i]))
 
 
-def _safe_div_arr(a: np.ndarray, b: np.ndarray) -> np.ndarray:
-    """Vectorized :func:`_safe_div`: elementwise ``a/b`` where ``b > 0``."""
-    a = np.asarray(a, dtype=np.float64)
-    return np.divide(a, b, out=np.zeros_like(a), where=np.asarray(b) > 0)
+def _log2_knob(x, xp):
+    """``log2`` of a knob column, bit-stable across backends.
 
-
-def snapshot_all(prev: FleetStats, cur: FleetStats) -> FleetSnapshot:
-    """Vectorized :func:`snapshot` over two consecutive fleet probes.
-
-    Arithmetic is elementwise-identical to the scalar path (same ops in
-    the same order on float64), so fleet rows match per-interface
-    snapshots bit for bit — the fleet/loop equivalence tests rely on it.
+    XLA's ``log2`` can land 1 ulp off libm even on exact powers of two;
+    that error survives the float32 feature cast through the θ-delta
+    subtraction (6.0 - 5.999…e0 ≈ 9e-16 instead of exactly 0.0) and can
+    flip GBDT splits whose threshold sits at 0.  Knob values are powers
+    of two (the Θ grid), where ``frexp`` recovers the exponent exactly;
+    non-power-of-two values (only reachable by writing knobs outside Θ)
+    fall back to the backend ``log2``.
     """
-    dt = max(cur.t - prev.t, 1e-9)
+    if xp is np:
+        return np.log2(x)
+    m, e = xp.frexp(x.astype(np.float64))
+    return xp.where(m == 0.5, (e - 1).astype(np.float64),
+                    xp.log2(x.astype(np.float64)))
 
-    def common(op: int) -> list[np.ndarray]:
+
+def snapshot_arrays(prev, cur, xp=np):
+    """Backend-agnostic core of :func:`snapshot_all`.
+
+    ``prev`` / ``cur`` expose the :class:`FleetStats` field surface
+    (stacked cumulative counters); ``xp`` is the array namespace.  With
+    ``xp=np`` this is the oracle; :mod:`repro.pfs.loop_jax` calls it with
+    ``xp=jnp`` so the device-resident loop differences probes with the
+    *literal same* arithmetic, in the same op order, on float64.
+
+    Returns ``(dt, read_mat, write_mat, read_volume, write_volume)``.
+    """
+    dt = xp.maximum(cur.t - prev.t, 1e-9)
+
+    def safe_div(a, b):
+        """Elementwise ``a/b`` where ``b > 0`` else 0 (no divide-by-0)."""
+        ok = b > 0
+        return xp.where(ok, a / xp.where(ok, b, 1.0), 0.0)
+
+    def common(op: int) -> list:
         d_bytes = (cur.bytes_done[op] - prev.bytes_done[op]).astype(np.float64)
         d_rpcs = (cur.rpcs_sent[op] - prev.rpcs_sent[op]).astype(np.float64)
         d_rpc_bytes = (cur.rpc_bytes[op] - prev.rpc_bytes[op]).astype(np.float64)
@@ -220,39 +241,53 @@ def snapshot_all(prev: FleetStats, cur: FleetStats) -> FleetSnapshot:
         return [
             d_bytes / dt / 1e6,
             d_rpcs / dt,
-            _safe_div_arr(d_rpc_bytes, d_rpcs) / PAGE_SIZE,
-            _safe_div_arr(d_partial, d_rpcs),
-            _safe_div_arr(d_lat, d_done) * 1e3,
+            safe_div(d_rpc_bytes, d_rpcs) / PAGE_SIZE,
+            safe_div(d_partial, d_rpcs),
+            safe_div(d_lat, d_done) * 1e3,
             d_pend / dt / 2**20,
             d_act / dt,
-            _safe_div_arr(d_act / dt, cur.rpcs_in_flight),
+            safe_div(d_act / dt, cur.rpcs_in_flight),
             d_reqs / dt,
-            _safe_div_arr(d_req_bytes, d_reqs) / 1024.0,
+            safe_div(d_req_bytes, d_reqs) / 1024.0,
             cur.randomness[op].astype(np.float64),
         ]
 
-    knobs = [np.log2(cur.window_pages), np.log2(cur.rpcs_in_flight)]
+    knobs = [_log2_knob(cur.window_pages, xp),
+             _log2_knob(cur.rpcs_in_flight, xp)]
 
     r = common(READ)
     d_req_bytes_r = (cur.req_bytes[READ] - prev.req_bytes[READ]).astype(np.float64)
     d_hit = (cur.cache_hit_bytes - prev.cache_hit_bytes).astype(np.float64)
-    r.append(_safe_div_arr(d_hit, d_req_bytes_r))
-    read_mat = np.stack(r + knobs, axis=1)
+    r.append(safe_div(d_hit, d_req_bytes_r))
+    read_mat = xp.stack(r + knobs, axis=1)
 
     w = common(WRITE)
     w.append((cur.block_time - prev.block_time).astype(np.float64) / dt)
     w.append((cur.dirty_integral - prev.dirty_integral).astype(np.float64) / dt / 2**20)
     w.append((cur.grant_integral - prev.grant_integral).astype(np.float64) / dt / 2**20)
-    write_mat = np.stack(w + knobs, axis=1)
+    write_mat = xp.stack(w + knobs, axis=1)
 
+    read_vol = (cur.bytes_done[READ] - prev.bytes_done[READ]).astype(np.float64)
+    write_vol = (cur.bytes_done[WRITE] - prev.bytes_done[WRITE]).astype(np.float64)
+    return dt, read_mat, write_mat, read_vol, write_vol
+
+
+def snapshot_all(prev: FleetStats, cur: FleetStats) -> FleetSnapshot:
+    """Vectorized :func:`snapshot` over two consecutive fleet probes.
+
+    Arithmetic is elementwise-identical to the scalar path (same ops in
+    the same order on float64), so fleet rows match per-interface
+    snapshots bit for bit — the fleet/loop equivalence tests rely on it.
+    """
+    dt, read_mat, write_mat, read_vol, write_vol = snapshot_arrays(prev, cur)
     return FleetSnapshot(
         t=cur.t,
-        dt=dt,
+        dt=float(dt),
         oscs=cur.oscs,
         read=read_mat,
         write=write_mat,
-        read_volume=(cur.bytes_done[READ] - prev.bytes_done[READ]).astype(np.float64),
-        write_volume=(cur.bytes_done[WRITE] - prev.bytes_done[WRITE]).astype(np.float64),
+        read_volume=read_vol,
+        write_volume=write_vol,
     )
 
 

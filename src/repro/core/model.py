@@ -58,6 +58,10 @@ class DIALModel:
     def __post_init__(self):
         self._theta_feats = self.space.as_features()  # (|Theta|, 2) log2
         self._jax_fns = {}
+        # bumped by update_forests: consumers that baked forest copies
+        # onto the device (e.g. the fused-loop cache) key on it so a
+        # refit can never serve stale trees
+        self._version = getattr(self, "_version", 0)
 
     def update_forests(self, read_forest: DenseForest | None = None,
                        write_forest: DenseForest | None = None) -> None:
@@ -72,6 +76,7 @@ class DIALModel:
         if write_forest is not None:
             self.write_forest = write_forest
         self._jax_fns.clear()
+        self._version += 1
 
     def forest(self, op: int) -> DenseForest:
         return self.read_forest if op == READ else self.write_forest
@@ -128,6 +133,22 @@ class DIALModel:
                 self.read_forest, self.write_forest,
                 use_pallas=(self.backend == "pallas"))
         return self._jax_fns[key](X_read, X_write)
+
+    def paired_arrays(self):
+        """Both forests stacked into one paired tensor set (numpy).
+
+        ``(feature, threshold, leaf, base, depth, n_features)`` with
+        forest axis 0 = read, 1 = write — the arrays the fused fleet
+        predictor and the device-resident loop
+        (:mod:`repro.pfs.loop_jax`) traverse with a per-row op selector.
+        Cached until :meth:`update_forests` swaps the forests.
+        """
+        from repro.kernels.gbdt_forest import ops as kops  # lazy import
+        key = ("paired",)
+        if key not in self._jax_fns:
+            self._jax_fns[key] = kops.pair_forests(self.read_forest,
+                                                   self.write_forest)
+        return self._jax_fns[key]
 
     # ------------------------------------------------------------------ #
     def predict_proba(self, op: int, X: np.ndarray) -> np.ndarray:

@@ -49,10 +49,11 @@ def conditional_score_greedy(
     op: int,
     current: tuple[int, int],
     space: ConfigSpace = SPACE,
-    params: TunerParams = TunerParams(),
+    params: TunerParams | None = None,
 ) -> TuneDecision:
     """Algorithm 1.  ``probs`` is f(theta, H_t) for every theta in
     ``space.configs()`` order."""
+    params = params if params is not None else TunerParams()
     thetas = space.as_array()                      # (|Theta|, 2) raw values
     keep = probs > params.tau                      # line 4
     if not keep.any():                             # no candidate clears tau
@@ -101,12 +102,51 @@ class FleetDecisions:
             score=float(self.score[i]))
 
 
+def score_greedy_arrays(probs, ops, current, thetas, params: TunerParams,
+                        xp=np):
+    """Backend-agnostic core of the batched Algorithm 1.
+
+    ``probs`` is ``(m, M)`` float64, ``ops`` ``(m,)`` op codes,
+    ``current`` ``(m, 2)`` integer thetas, ``thetas`` the ``(M, 2)``
+    float64 grid.  ``xp`` selects the array namespace: ``np`` is the
+    oracle path; :mod:`repro.pfs.loop_jax` passes ``jnp`` so the
+    device-resident loop runs the *literal same* reductions (masked
+    extrema MinMax, op-selected scores, first-max argmax) under ``jit``.
+
+    Returns ``(theta, changed, n_candidates, score)``.
+    """
+    m = probs.shape[0]
+    keep = probs > params.tau                          # (m, M)   line 4
+    any_keep = keep.any(axis=1)
+
+    # MinMax over each row's surviving subset (line 6), via masked extrema
+    t3 = thetas[None, :, :]                            # (1, M, 2)
+    lo = xp.min(xp.where(keep[:, :, None], t3, xp.inf), axis=1)
+    hi = xp.max(xp.where(keep[:, :, None], t3, -xp.inf), axis=1)
+    span = xp.where(hi - lo > 0, hi - lo, 1.0)
+    norm = (t3 - lo[:, None, :]) / span[:, None, :]    # (m, M, 2)
+
+    w_scores = probs * (1.0 + params.beta * norm.sum(axis=2))
+    r_scores = probs * (1.0 + params.alpha * norm[:, :, 0]) + norm[:, :, 1]
+    scores = xp.where((ops == WRITE)[:, None], w_scores, r_scores)
+    scores = xp.where(keep, scores, -xp.inf)
+
+    j = xp.argmax(scores, axis=1)                      # first max, like scalar
+    cur64 = current.astype(xp.int64)
+    theta = thetas[j].astype(xp.int64)                 # (m, 2)
+    theta = xp.where(any_keep[:, None], theta, cur64)
+    changed = any_keep & (theta != cur64).any(axis=1)
+    score = xp.where(any_keep, scores[xp.arange(m), j], 0.0)
+    n_candidates = keep.sum(axis=1) * any_keep
+    return theta, changed, n_candidates, score
+
+
 def conditional_score_greedy_batch(
     probs: np.ndarray,
     ops: np.ndarray,
     current: np.ndarray,
     space: ConfigSpace = SPACE,
-    params: TunerParams = TunerParams(),
+    params: TunerParams | None = None,
 ) -> FleetDecisions:
     """Vectorized Algorithm 1 over ``m`` interfaces at once.
 
@@ -117,31 +157,16 @@ def conditional_score_greedy_batch(
     same MinMax-over-survivors normalization, same first-max tie break —
     just computed with masked reductions instead of a Python loop.
     """
+    params = params if params is not None else TunerParams()
     probs = np.asarray(probs, dtype=np.float64)
     ops = np.asarray(ops)
     current = np.asarray(current)
-    m = probs.shape[0]
     thetas = space.as_array()                          # (M, 2)
-    keep = probs > params.tau                          # (m, M)   line 4
-    any_keep = keep.any(axis=1)
-
-    # MinMax over each row's surviving subset (line 6), via masked extrema
-    t3 = thetas[None, :, :]                            # (1, M, 2)
-    lo = np.min(np.where(keep[:, :, None], t3, np.inf), axis=1)
-    hi = np.max(np.where(keep[:, :, None], t3, -np.inf), axis=1)
-    span = np.where(hi - lo > 0, hi - lo, 1.0)
-    norm = (t3 - lo[:, None, :]) / span[:, None, :]    # (m, M, 2)
-
-    w_scores = probs * (1.0 + params.beta * norm.sum(axis=2))
-    r_scores = probs * (1.0 + params.alpha * norm[:, :, 0]) + norm[:, :, 1]
-    scores = np.where((ops == WRITE)[:, None], w_scores, r_scores)
-    scores = np.where(keep, scores, -np.inf)
-
-    j = np.argmax(scores, axis=1)                      # first max, like scalar
-    theta = thetas[j].astype(np.int64)                 # (m, 2)
-    theta = np.where(any_keep[:, None], theta, current.astype(np.int64))
-    changed = any_keep & (theta != current).any(axis=1)
-    score = np.where(any_keep, scores[np.arange(m), j], 0.0)
+    # rows with no survivor produce inf/nan in the masked-out lanes
+    # (0 * inf); they are discarded by the keep mask before use
+    with np.errstate(invalid="ignore"):
+        theta, changed, n_candidates, score = score_greedy_arrays(
+            probs, ops, current, thetas, params)
     return FleetDecisions(theta=theta, changed=changed,
-                          n_candidates=keep.sum(axis=1) * any_keep,
+                          n_candidates=n_candidates,
                           score=score, probs=probs)

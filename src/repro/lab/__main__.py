@@ -39,7 +39,8 @@ def _cmd_evaluate(args) -> None:
     seconds = 3.0 if args.smoke else args.seconds
     report = evaluate(names=args.scenarios or None, model=model,
                       seconds=seconds, interval=args.interval,
-                      seg_backend=args.seg_backend)
+                      seg_backend=args.seg_backend,
+                      fused=not args.no_fused)
     jpath, mpath = write_report(report, args.out)
     s = report["summary"]
     print(f"{s['n_scenarios']} scenarios -> {jpath} / {mpath}")
@@ -116,6 +117,9 @@ def main(argv=None) -> None:
     ev.add_argument("--seconds", type=float, default=10.0)
     ev.add_argument("--interval", type=float, default=0.5)
     ev.add_argument("--seg-backend", default="jax")
+    ev.add_argument("--no-fused", action="store_true",
+                    help="use the per-interval host loop instead of the "
+                         "single-dispatch device-resident loop")
     ev.add_argument("--out", default="reports/lab")
     ev.add_argument("--smoke", action="store_true",
                     help="CI-sized run (3 s per scenario, smoke model)")

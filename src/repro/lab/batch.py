@@ -230,8 +230,9 @@ class BatchPort:
 
 def run_batch(batch: ScenarioBatch, model=None, seconds: float = 10.0,
               interval: float = 0.5, seg_backend: str = "jax",
-              tuner_params: TunerParams = TunerParams(),
-              tune_cols=None, engine: BatchEngine | None = None):
+              tuner_params: TunerParams | None = None,
+              tune_cols=None, engine: BatchEngine | None = None,
+              fused: bool = False):
     """Drive a whole batch for ``seconds``, optionally DIAL-tuning.
 
     The batched counterpart of :func:`repro.core.fleet.run_fleet`: every
@@ -239,19 +240,143 @@ def run_batch(batch: ScenarioBatch, model=None, seconds: float = 10.0,
     given) by one fleet tuning tick over ``tune_cols`` (default: every
     interface of every element).  Returns the :class:`FleetAgent` (or
     ``None`` when untuned); final state lives on ``batch.state``.
+
+    ``fused=True`` routes the whole run through the device-resident loop
+    (:class:`~repro.pfs.loop_jax.FusedLoop` vmapped over the batch): one
+    jitted dispatch covers every interval of engine **and** tuning, with
+    each element's whole-run disturbance schedule compiled once up front
+    instead of rebuilt per interval.  Knob trajectories are identical to
+    the host path (tests/test_loop_fused.py); the return value is a
+    :class:`~repro.pfs.loop_jax.FusedLoopResult`, whose ``decisions``
+    list matches the host agent's interval-aligned records.
     """
     steps = max(int(round(interval / batch.params.tick)), 1)
     n_intervals = int(round(seconds / interval))
+
+    if fused:
+        if model is None:
+            raise ValueError("fused=True requires a model (untuned runs "
+                             "gain nothing from fusing the decision loop)")
+        if engine is not None:
+            raise ValueError("`engine` configures the per-interval host "
+                             "path; the fused path compiles its own "
+                             "whole-run programs (pass seg_backend "
+                             "instead)")
+        return _run_batch_fused(batch, model, steps, n_intervals,
+                                tuner_params, seg_backend, tune_cols)
+
     engine = engine or BatchEngine(batch.params, batch.topo, steps,
                                    seg_backend=seg_backend)
     fleet = None
     if model is not None:
         fleet = FleetAgent(BatchPort(batch, cols=tune_cols), model,
                            tuner_params=tuner_params)
+    # precompile the whole run's disturbance schedule once and slice per
+    # interval — make_schedule is a pure function of the absolute tick
+    # index, so slicing the full-run arrays is exactly the per-interval
+    # rebuild without B Python rebuilds per interval
+    full_sched = batch.schedule(0, n_intervals * steps)
     for i in range(n_intervals):
-        sched = batch.schedule(i * steps, steps)
+        sched = jax.tree.map(
+            lambda a: a[:, i * steps:(i + 1) * steps], full_sched)
         batch.state, batch.wstate = engine.run_interval(
             batch.table, batch.state, batch.wstate, sched)
         if fleet is not None:
             fleet.tick()
     return fleet
+
+
+# compiled fused loops, reused across run_batch calls: scenarios that
+# share (model, physics, topology dims, cadence) hit the same FusedLoop
+# instance, and jax.jit then caches per (table/state) *structure*, so an
+# evaluate sweep compiles a handful of programs instead of one per call
+_FUSED_LOOPS: dict = {}
+
+
+def _cached_loop(params, topo, steps, model, tuner_params, seg_backend,
+                 tuned: bool):
+    from repro.pfs.loop_jax import FusedLoop
+
+    key = (None if model is None else id(model),
+           0 if model is None else model._version,
+           params, topo.n_clients, topo.n_osts,
+           # same-sized topologies can differ in wiring (osc -> client /
+           # OST maps); the compiled program bakes the wiring in
+           np.asarray(topo.osc_client).tobytes(),
+           np.asarray(topo.osc_ost).tobytes(),
+           int(steps), tuner_params, seg_backend, tuned)
+    if key not in _FUSED_LOOPS:
+        if len(_FUSED_LOOPS) >= 32:          # bound the cache: evict the
+            _FUSED_LOOPS.pop(next(iter(_FUSED_LOOPS)))   # oldest (FIFO)
+        # the model is kept alive alongside its loop: the key uses
+        # id(model), which is only unique while the object lives — a
+        # cached entry must therefore pin the model so a recycled id can
+        # never alias someone else's forests to this compiled program
+        _FUSED_LOOPS[key] = (FusedLoop(
+            params, topo, steps, model, tuner_params=tuner_params,
+            seg_backend=seg_backend, batched=True, tuned=tuned), model)
+    return _FUSED_LOOPS[key][0]
+
+
+def _run_batch_fused(batch: ScenarioBatch, model, steps: int,
+                     n_intervals: int, tuner_params, seg_backend: str,
+                     tune_cols):
+    """One (or two) jitted dispatches for the whole batched run.
+
+    Elements with at least one tuned interface go through the
+    device-resident decision loop; the rest (e.g. the static-θ arms of
+    an evaluate comparison) run a lean engine-only fused program — no
+    featurize/forest/Algorithm-1 work for elements that can never
+    decide.  Final states are scattered back in element order.
+    """
+    import dataclasses as _dc
+
+    b, n = len(batch), batch.n_osc
+    mask = np.zeros((b, n), dtype=bool)
+    cols = (np.arange(b * n, dtype=np.int64) if tune_cols is None
+            else np.asarray(tune_cols, dtype=np.int64))
+    mask[cols // n, cols % n] = True
+    # the whole run's schedule, compiled once (pure function of the
+    # absolute tick index -> identical to the per-interval rebuild)
+    sched = batch.schedule(0, n_intervals * steps)
+
+    t_idx = np.nonzero(mask.any(axis=1))[0]
+    u_idx = np.nonzero(~mask.any(axis=1))[0]
+    take = lambda tree, idx: jax.tree.map(lambda a: np.asarray(a)[idx],
+                                          tree)
+
+    loop_t = _cached_loop(batch.params, batch.topo, steps, model,
+                          tuner_params, seg_backend, tuned=True)
+    if len(u_idx) == 0:
+        result = loop_t.run(batch.table, batch.state, batch.wstate,
+                            n_intervals, schedule=sched, tune_mask=mask)
+        batch.state, batch.wstate = result.state, result.wstate
+        return result
+
+    res_t = loop_t.run(take(batch.table, t_idx), take(batch.state, t_idx),
+                       take(batch.wstate, t_idx), n_intervals,
+                       schedule=take(sched, t_idx), tune_mask=mask[t_idx])
+    loop_u = _cached_loop(batch.params, batch.topo, steps, None,
+                          tuner_params, seg_backend, tuned=False)
+    res_u = loop_u.run(take(batch.table, u_idx), take(batch.state, u_idx),
+                       take(batch.wstate, u_idx), n_intervals,
+                       schedule=take(sched, u_idx))
+
+    def merge(a_t, a_u):
+        out = np.empty((b,) + a_t.shape[1:], dtype=a_t.dtype)
+        out[t_idx] = a_t
+        out[u_idx] = a_u
+        return out
+
+    state = jax.tree.map(merge, res_t.state, res_u.state)
+    wstate = jax.tree.map(merge, res_t.wstate, res_u.wstate)
+    # decision columns come back indexed within the tuned sub-batch;
+    # remap to the caller's element order (b * n + osc fleet columns).
+    # The raw trace is dropped: its leaves stay indexed by the tuned
+    # sub-batch, which would contradict the remapped decisions on the
+    # same result object.
+    for r in res_t.decisions:
+        r.oscs = t_idx[r.oscs // n] * n + r.oscs % n
+    batch.state, batch.wstate = state, wstate
+    return _dc.replace(res_t, state=state, wstate=wstate, trace=None,
+                       hist=None)

@@ -161,8 +161,9 @@ def run_continual(spec: ScenarioSpec, model: DIALModel, *,
                 theta[explore] = np.asarray([configs[x] for x in j])
                 port.set_knobs_many(rows[explore], theta[explore, 0],
                                     theta[explore, 1])
-                # keep the agent's view of the applied config honest
-                fleet._current[rows[explore]] = theta[explore]
+                # no shadow-state repair needed: the agent derives the
+                # applied configuration from its next probe, so this
+                # out-of-band flip is seen by construction
             # position-weighted checksum of the applied (row, θ) block —
             # frozen/online traces must agree until the first refit
             w = np.arange(theta.size, dtype=np.float64) + 1.0

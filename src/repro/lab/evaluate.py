@@ -57,9 +57,16 @@ class ScenarioResult:
 def evaluate_scenario(spec: ScenarioSpec, model: DIALModel,
                       seconds: float = 10.0, interval: float = 0.5,
                       seg_backend: str = "jax",
-                      tuner_params: TunerParams = TunerParams(),
-                      ) -> ScenarioResult:
-    """One scenario under every static θ plus DIAL, in one batch."""
+                      tuner_params: TunerParams | None = None,
+                      fused: bool = True) -> ScenarioResult:
+    """One scenario under every static θ plus DIAL, in one batch.
+
+    ``fused=True`` (default) runs the whole comparison through the
+    device-resident loop — every interval of engine + tuning in a single
+    jitted dispatch per scenario (knob trajectories identical to the
+    host loop; see tests/test_loop_fused.py).  ``fused=False`` keeps the
+    per-interval host loop.
+    """
     configs = SPACE.configs()
     m = len(configs)
     built = []
@@ -71,7 +78,8 @@ def evaluate_scenario(spec: ScenarioSpec, model: DIALModel,
     dial_cols = m * n + np.arange(n)       # last element is the tuned one
     fleet = run_batch(batch, model=model, seconds=seconds,
                       interval=interval, seg_backend=seg_backend,
-                      tuner_params=tuner_params, tune_cols=dial_cols)
+                      tuner_params=tuner_params, tune_cols=dial_cols,
+                      fused=fused)
 
     tput = batch.throughput(seconds)["total_mbs"]
     static = tput[:m]
@@ -101,7 +109,7 @@ def evaluate_scenario(spec: ScenarioSpec, model: DIALModel,
 
 def evaluate(names=None, model: DIALModel | None = None,
              seconds: float = 10.0, interval: float = 0.5,
-             seg_backend: str = "jax") -> dict:
+             seg_backend: str = "jax", fused: bool = True) -> dict:
     """Run the catalog (default: every registered scenario) and return
     the report dict (rows + summary)."""
     if model is None:
@@ -111,7 +119,7 @@ def evaluate(names=None, model: DIALModel | None = None,
     for name in names:
         res = evaluate_scenario(get_scenario(name), model,
                                 seconds=seconds, interval=interval,
-                                seg_backend=seg_backend)
+                                seg_backend=seg_backend, fused=fused)
         rows.append(res.row())
     speedups = [r["dial_vs_default"] for r in rows]
     fracs = [r["dial_frac_of_best_static"] for r in rows]

@@ -1,0 +1,452 @@
+"""Device-resident DIAL decision loop: one ``jit`` per tuning *run*.
+
+The host loop (:func:`repro.core.fleet.run_fleet`) pays one device
+round trip per tuning interval: the jitted engine scan stops, the whole
+``SimState`` converts to numpy, the fleet agent differences/featurizes
+on the host, scores with one more jitted launch, runs Algorithm 1 in
+numpy, and re-uploads the knobs.  Per paper Table III the decision path
+itself budgets 10-13.5 ms per interface — cheap — so at fleet scale the
+loop is dominated by dispatch and transfer, not compute.
+
+This module folds the *entire* closed loop into one compiled program:
+
+    lax.scan over intervals
+      └─ lax.scan over ticks      demand_step ∘ engine_step_jax
+      └─ probe                    counters read straight off SimState
+      └─ snapshot                 :func:`repro.core.metrics.snapshot_arrays`
+                                  (the literal oracle arithmetic, xp=jnp)
+      └─ features                 history ‖ θ ‖ Δθ, float64 → float32
+                                  (same rounding as the host matrix)
+      └─ forest scoring           :func:`paired_forest_margin_ref` — both
+                                  ops, all interfaces × configs, one pass
+      └─ Algorithm 1              :func:`repro.core.tuner.score_greedy_arrays`
+                                  (the literal oracle reductions, xp=jnp)
+      └─ gating + write-back      volume/steadiness masks, knob update on
+                                  the in-scan ``SimState``
+
+so ``N`` intervals of engine + tuning execute as a single jitted
+dispatch (:class:`FusedLoop`), and a whole batch of scenarios vmaps over
+it (``batched=True``), each element carrying its own precompiled
+disturbance schedule — no per-interval ``make_schedule`` rebuild.
+
+Equivalence: the loop is pinned against the (bug-fixed)
+:class:`~repro.core.fleet.FleetAgent` oracle — identical knob
+trajectories (θ exact) and probe counters (≤1e-6 relative, observed
+~1e-15) over multi-interval mixed-workload scenarios on both engine
+backends (tests/test_loop_fused.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from repro.core.config_space import SPACE, ConfigSpace
+from repro.core.metrics import (N_READ, N_WRITE, READ_KNOB_IDX,
+                                WRITE_KNOB_IDX, snapshot_arrays)
+from repro.core.model import DIALModel
+from repro.core.tuner import TunerParams, score_greedy_arrays
+from repro.kernels.gbdt_forest.ref import paired_forest_margin_ref
+from repro.kernels.segment_reduce.ops import make_segment_sum
+from repro.pfs.engine_jax import engine_step_jax
+from repro.pfs.state import (READ, WRITE, Disturbance, SimParams, SimState,
+                             SimTopo)
+from repro.pfs.workloads import WorkloadState, WorkloadTable
+
+
+class Probe(NamedTuple):
+    """Cumulative counters the decision loop reads off ``SimState``.
+
+    Field names mirror :class:`repro.pfs.stats.FleetStats` so
+    :func:`repro.core.metrics.snapshot_arrays` consumes either — a probe
+    here is zero-copy views of the in-scan state, not a host transfer.
+    """
+
+    t: jnp.ndarray
+    bytes_done: jnp.ndarray
+    rpcs_sent: jnp.ndarray
+    rpc_bytes: jnp.ndarray
+    partial_rpcs: jnp.ndarray
+    latency_sum: jnp.ndarray
+    rpcs_done: jnp.ndarray
+    req_count: jnp.ndarray
+    req_bytes: jnp.ndarray
+    pending_integral: jnp.ndarray
+    active_integral: jnp.ndarray
+    cache_hit_bytes: jnp.ndarray
+    block_time: jnp.ndarray
+    dirty_integral: jnp.ndarray
+    grant_integral: jnp.ndarray
+    randomness: jnp.ndarray
+    window_pages: jnp.ndarray
+    rpcs_in_flight: jnp.ndarray
+
+
+def probe_state(state: SimState) -> Probe:
+    """The fleet probe as views of the (possibly traced) state arrays."""
+    return Probe(
+        t=state.now,
+        bytes_done=state.ctr_bytes_done,
+        rpcs_sent=state.ctr_rpcs_sent,
+        rpc_bytes=state.ctr_rpc_bytes,
+        partial_rpcs=state.ctr_partial_rpcs,
+        latency_sum=state.ctr_latency_sum,
+        rpcs_done=state.ctr_rpcs_done,
+        req_count=state.ctr_req_count,
+        req_bytes=state.ctr_req_bytes,
+        pending_integral=state.ctr_pending_integral,
+        active_integral=state.ctr_active_integral,
+        cache_hit_bytes=state.ctr_cache_hit_bytes,
+        block_time=state.ctr_block_time,
+        dirty_integral=state.ctr_dirty_integral,
+        grant_integral=state.ctr_grant_integral,
+        randomness=state.randomness,
+        window_pages=state.window_pages,
+        rpcs_in_flight=state.rpcs_in_flight,
+    )
+
+
+def conditional_score_greedy_jnp(probs, ops, current,
+                                 space: ConfigSpace = SPACE,
+                                 params: TunerParams | None = None):
+    """Batched Algorithm 1 on the JAX backend (the fused-loop tuner).
+
+    Same signature shape as
+    :func:`repro.core.tuner.conditional_score_greedy_batch`; returns
+    numpy ``(theta, changed, n_candidates, score)``.  Exists mainly so
+    the property tests can pin the in-``jit`` Algorithm 1 against both
+    the scalar and the batched numpy oracles on adversarial rows.
+    """
+    params = params if params is not None else TunerParams()
+    with enable_x64():
+        out = score_greedy_arrays(
+            jnp.asarray(probs, dtype=jnp.float64),
+            jnp.asarray(ops),
+            jnp.asarray(current),
+            jnp.asarray(space.as_array()),
+            params, xp=jnp)
+        return tuple(np.asarray(x) for x in out)
+
+
+@dataclasses.dataclass
+class FusedLoopResult:
+    """Everything one fused run produced, already back on the host.
+
+    ``decisions`` carries one :class:`~repro.core.fleet.FleetTickResult`
+    per interval (empty results for gated intervals), aligned with
+    interval indices exactly like the bug-fixed
+    :attr:`FleetAgent.decisions` — so every trajectory consumer works on
+    either path unchanged.
+    """
+
+    state: SimState
+    wstate: WorkloadState
+    trace: dict | None
+    decisions: list
+    # final (k+1)-deep snapshot history (read/write matrices + volumes)
+    # and the interval length — what a host agent needs to continue
+    # ticking after the fused run without re-warming (None when untuned)
+    hist: tuple | None = None
+    interval_seconds: float = 0.0
+    n_run: int = 0
+
+    @property
+    def n_intervals(self) -> int:
+        return len(self.decisions) if self.decisions else self.n_run
+
+
+def decisions_from_trace(trace: dict) -> list:
+    """Host-side per-interval decision records from a fused trace.
+
+    Batched traces (leaves ``(B, N, ...)``) flatten the batch axis into
+    fleet columns ``b * n + osc`` — the same layout
+    :class:`~repro.lab.batch.BatchPort` exposes to the host agent.
+    """
+    from repro.core.fleet import FleetTickResult
+    from repro.core.tuner import FleetDecisions
+
+    if np.asarray(trace["decided"]).ndim == 3:  # (B, N, n) -> (N, B*n)
+        def flat(x):
+            x = np.moveaxis(np.asarray(x), 0, 1)
+            return x.reshape(x.shape[0], -1, *x.shape[3:])
+    else:
+        flat = np.asarray
+    decided = flat(trace["decided"])
+    ops = flat(trace["ops"])
+    theta = flat(trace["theta"])
+    changed = flat(trace["changed"])
+    n_cand = flat(trace["n_candidates"])
+    score = flat(trace["score"])
+    probs = flat(trace["probs"])
+
+    out = []
+    for i in range(decided.shape[0]):
+        rows = np.nonzero(decided[i])[0]
+        out.append(FleetTickResult(
+            oscs=rows.astype(np.int64),
+            ops=ops[i][rows].astype(np.int64),
+            decisions=FleetDecisions(
+                theta=theta[i][rows].astype(np.int64),
+                changed=changed[i][rows].astype(bool),
+                n_candidates=n_cand[i][rows].astype(np.int64),
+                score=score[i][rows].astype(np.float64),
+                probs=probs[i][rows].astype(np.float64))))
+    return out
+
+
+class FusedLoop:
+    """N intervals of engine + DIAL tuning per jitted dispatch.
+
+    One instance compiles one ``(topology, table structure, steps,
+    n_intervals)`` signature; repeated :meth:`run` calls with the same
+    shapes reuse the compiled program.  ``batched=True`` vmaps the whole
+    loop over a leading batch axis on table/state/wstate/schedule/mask
+    (the scenario-lab fan-out); the forests and tuner constants are
+    closed over unbatched.
+
+    Decentralization is untouched: every interface's decision still
+    reads only that interface's local counters — the fusion is an
+    execution strategy, exactly like :class:`~repro.core.fleet.FleetAgent`.
+    """
+
+    def __init__(self, params: SimParams, topo: SimTopo,
+                 steps_per_interval: int, model: DIALModel | None,
+                 space: ConfigSpace = SPACE,
+                 tuner_params: TunerParams | None = None,
+                 k: int = 1,
+                 min_volume_bytes: float = 256 * 1024,
+                 warmup_intervals: int = 2,
+                 seg_backend: str = "auto",
+                 batched: bool = False,
+                 tuned: bool = True):
+        self.params = params
+        self.topo = topo
+        self.steps = int(steps_per_interval)
+        self.space = space
+        self.tuner_params = (tuner_params if tuner_params is not None
+                             else TunerParams())
+        self.k = int(k)
+        self.min_volume = float(min_volume_bytes)
+        self.warmup = int(warmup_intervals)
+        self.batched = bool(batched)
+        # tuned=False compiles the lean engine-only run (no decision
+        # graph at all) — used for the untuned elements of a split batch,
+        # where paying featurize/forest/Algorithm-1 per element would
+        # waste most of the dispatch (e.g. the 24 static arms of an
+        # evaluate comparison)
+        self.tuned = bool(tuned)
+        if self.tuned and model is None:
+            raise ValueError("a tuned FusedLoop needs a model")
+        segsum = make_segment_sum(seg_backend)
+
+        n = topo.n_osc
+        m = len(space)
+        if self.tuned:
+            feature, threshold, leaf, base, depth, n_features = \
+                model.paired_arrays()
+            with enable_x64():   # constants must keep f64 (oracle parity)
+                feature = jnp.asarray(feature)
+                threshold = jnp.asarray(threshold)
+                leaf = jnp.asarray(leaf)
+                base = jnp.asarray(base)
+                theta_raw = jnp.asarray(space.as_array())        # f64
+                theta_feats = jnp.asarray(space.as_features())   # log2
+            kp1 = self.k + 1
+            dim_r = N_READ * kp1 + 4
+            dim_w = N_WRITE * kp1 + 4
+            if n_features < max(dim_r, dim_w):
+                raise ValueError(
+                    f"model expects {n_features} features but k={self.k} "
+                    f"histories need {max(dim_r, dim_w)} — model trained "
+                    f"with a different history length?")
+        else:
+            kp1 = self.k + 1
+        tp = self.tuner_params
+        warm_from = self.warmup + self.k + 1   # first deciding interval
+        pfsp, pfst = params, topo
+
+        def features(hist, n_feat, knob_idx):
+            """(k+1, n, N) history -> (n*M, dim) float32, host layout."""
+            h2 = jnp.moveaxis(hist, 0, 1).reshape(n, kp1 * n_feat)
+            cur = h2[:, [self.k * n_feat + knob_idx[0],
+                         self.k * n_feat + knob_idx[1]]]      # (n, 2)
+            x64 = jnp.concatenate([
+                jnp.broadcast_to(h2[:, None, :], (n, m, h2.shape[1])),
+                jnp.broadcast_to(theta_feats[None], (n, m, 2)),
+                theta_feats[None] - cur[:, None, :],
+            ], axis=2)
+            # float64 -> float32 exactly where the host path stores into
+            # its float32 matrix (same rounding, same bits)
+            return x64.astype(jnp.float32).reshape(n * m, -1)
+
+        def run_untuned(table, state, wstate, sched):
+            def interval(carry, dist):
+                carry, _ = jax.lax.scan(tick_body(table), carry, dist,
+                                        length=self.steps)
+                return carry, None
+            (state, wstate), _ = jax.lax.scan(
+                interval, (state, wstate), sched)
+            return state, wstate
+
+        def tick_body(table):
+            def body(carry, dist):
+                st, ws = carry
+                demand, ws = table.demand_step(pfsp, ws, st,
+                                               xp=jnp, segsum=segsum)
+                st = engine_step_jax(pfsp, pfst, st, demand, segsum,
+                                     disturbance=dist)
+                return (st, ws), None
+            return body
+
+        def run(table, state, wstate, sched, tune_mask):
+            hist0 = (jnp.zeros((kp1, n, N_READ)),
+                     jnp.zeros((kp1, n, N_WRITE)),
+                     jnp.zeros((kp1, n)), jnp.zeros((kp1, n)))
+
+            def interval(carry, dist):
+                state, wstate, prev, hist, tick = carry
+                (state, wstate), _ = jax.lax.scan(
+                    tick_body(table), (state, wstate), dist,
+                    length=self.steps)
+
+                # probe + snapshot: the oracle arithmetic, on device
+                cur = probe_state(state)
+                _, snap_r, snap_w, vol_r, vol_w = snapshot_arrays(
+                    prev, cur, xp=jnp)
+                hr, hw, hrv, hwv = hist
+                hist = (jnp.concatenate([hr[1:], snap_r[None]]),
+                        jnp.concatenate([hw[1:], snap_w[None]]),
+                        jnp.concatenate([hrv[1:], vol_r[None]]),
+                        jnp.concatenate([hwv[1:], vol_w[None]]))
+                hr, hw, hrv, hwv = hist
+                tick = tick + 1
+
+                # gating masks (same predicates as FleetAgent.tick)
+                ops = jnp.where(vol_r >= vol_w, READ, WRITE)
+                active = jnp.maximum(vol_r, vol_w) >= self.min_volume
+                v0 = jnp.where(ops == READ, hrv[0], hwv[0])
+                v1 = jnp.where(ops == READ, vol_r, vol_w)
+                ratio = v1 / jnp.maximum(v0, 1.0)
+                steady = (ratio >= 0.5) & (ratio <= 2.0)
+                warm = tick >= warm_from
+                decide = active & steady & warm & tune_mask
+
+                # features + one fused paired-forest pass for all rows
+                x_r = features(hr, N_READ, READ_KNOB_IDX)
+                x_w = features(hw, N_WRITE, WRITE_KNOB_IDX)
+                x_r = jnp.pad(x_r, ((0, 0), (0, n_features - dim_r)))
+                x_w = jnp.pad(x_w, ((0, 0), (0, n_features - dim_w)))
+                op_rows = jnp.repeat(ops, m)
+                x = jnp.where((op_rows == READ)[:, None], x_r, x_w)
+                margin = paired_forest_margin_ref(
+                    x, op_rows, feature, threshold, leaf, base, depth)
+                p32 = 1.0 / (1.0 + jnp.exp(-jnp.clip(margin, -30.0, 30.0)))
+                probs = p32.astype(jnp.float64).reshape(n, m)
+
+                # Algorithm 1 (the oracle reductions) + knob write-back;
+                # `current` comes from the probe itself, never a shadow
+                cur_theta = jnp.stack([state.window_pages,
+                                       state.rpcs_in_flight], axis=1)
+                theta, changed, n_cand, score = score_greedy_arrays(
+                    probs, ops, cur_theta, theta_raw, tp, xp=jnp)
+                apply = decide & changed
+                state = dataclasses.replace(
+                    state,
+                    window_pages=jnp.where(apply, theta[:, 0],
+                                           state.window_pages),
+                    rpcs_in_flight=jnp.where(apply, theta[:, 1],
+                                             state.rpcs_in_flight))
+
+                ys = {"decided": decide, "ops": ops, "theta": theta,
+                      "changed": changed, "n_candidates": n_cand,
+                      "score": score, "probs": probs}
+                return (state, wstate, cur, hist, tick), ys
+
+            carry0 = (state, wstate, probe_state(state), hist0,
+                      jnp.asarray(0, dtype=jnp.int64))
+            (state, wstate, _, hist, _), trace = jax.lax.scan(
+                interval, carry0, sched)
+            return state, wstate, trace, hist
+
+        fn = run if self.tuned else run_untuned
+        self._run = jax.jit(jax.vmap(fn) if self.batched else fn)
+
+    # ------------------------------------------------------------------ #
+    def neutral_schedule(self, n_intervals: int) -> Disturbance:
+        """Whole-run identity schedule with a flat leading time axis."""
+        return Disturbance.neutral(self.topo,
+                                   n_ticks=n_intervals * self.steps)
+
+    def _shape_schedule(self, sched: Disturbance,
+                        n_intervals: int) -> Disturbance:
+        """Flat ``(…, total_ticks, …)`` -> per-interval scan ``xs``."""
+        t_ax = 1 if self.batched else 0
+
+        def reshape(a):
+            a = np.asarray(a)
+            lead = a.shape[:t_ax]
+            return a.reshape(lead + (n_intervals, self.steps)
+                             + a.shape[t_ax + 1:])
+        return jax.tree.map(reshape, sched)
+
+    def run(self, table: WorkloadTable, state: SimState,
+            wstate: WorkloadState, n_intervals: int,
+            schedule: Disturbance | None = None,
+            tune_mask: np.ndarray | None = None) -> FusedLoopResult:
+        """Advance ``n_intervals`` of engine + tuning in one dispatch.
+
+        ``schedule`` is a whole-run :class:`Disturbance` with a flat
+        leading ``(n_intervals * steps, ...)`` time axis (batched: a
+        ``(B, total_ticks, ...)`` stack) — compiled **once** by the
+        caller, not rebuilt per interval.  ``tune_mask`` restricts which
+        interfaces may decide (default: all).  Numpy in, numpy out.
+        """
+        n_intervals = int(n_intervals)
+        if schedule is None:
+            schedule = self.neutral_schedule(n_intervals)
+            if self.batched:
+                b = np.asarray(state.window_pages).shape[0]
+                schedule = jax.tree.map(
+                    lambda a: np.broadcast_to(a, (b,) + a.shape), schedule)
+        sched = self._shape_schedule(schedule, n_intervals)
+        args = (table, state, wstate, sched)
+        if self.tuned:
+            if tune_mask is None:
+                shape = ((np.asarray(state.window_pages).shape[:1]
+                          + (self.topo.n_osc,)) if self.batched
+                         else (self.topo.n_osc,))
+                tune_mask = np.ones(shape, dtype=bool)
+            args = args + (np.asarray(tune_mask, dtype=bool),)
+
+        with enable_x64():
+            jargs = jax.tree.map(jnp.asarray, args)
+            out = self._run(*jargs)
+            out = jax.tree.map(
+                lambda x: x.block_until_ready()
+                if hasattr(x, "block_until_ready") else x, out)
+        if self.tuned:
+            jstate, jws, jtrace, jhist = out
+        else:
+            (jstate, jws), jtrace, jhist = out, None, None
+        state = jax.tree.map(np.array, jstate)
+        if not self.batched:
+            state.now = float(state.now)
+            state.tick_index = int(state.tick_index)
+        wstate = jax.tree.map(np.array, jws)
+        trace = (jax.tree.map(np.array, jtrace)
+                 if jtrace is not None else None)
+        hist = (jax.tree.map(np.array, jhist)
+                if jhist is not None else None)
+        return FusedLoopResult(
+            state=state, wstate=wstate, trace=trace,
+            decisions=(decisions_from_trace(trace)
+                       if trace is not None else []),
+            hist=hist,
+            interval_seconds=self.steps * self.params.tick,
+            n_run=n_intervals)
