@@ -1,6 +1,6 @@
 PY ?= python
 
-.PHONY: verify deps bench-fleet bench-train bench-loop bench-json lab-smoke continual-smoke
+.PHONY: verify deps bench-fleet bench-train bench-loop bench-json lab-smoke continual-smoke fuzz-smoke
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -29,3 +29,8 @@ lab-smoke:
 # CI-sized frozen-vs-online continual run (writes reports/lab/continual.json)
 continual-smoke:
 	PYTHONPATH=src $(PY) -m repro.lab continual --smoke
+
+# CI-sized fuzz sweep: 64 generated scenarios raced vs a static grid,
+# auto-triaged (writes reports/fuzz/report.{json,md})
+fuzz-smoke:
+	PYTHONPATH=src $(PY) -m repro.lab fuzz --smoke

@@ -5,6 +5,7 @@
                                  [--model PREFIX] [--out reports/lab]
     python -m repro.lab campaign [--smoke] [--out models/lab]
     python -m repro.lab continual [--smoke] [--scenario failing_ost]
+    python -m repro.lab fuzz [--smoke] [--seed 0] [--out reports/fuzz]
 
 ``evaluate`` runs every registered scenario (or the named subset) under
 every static θ plus DIAL and writes ``report.json`` / ``report.md``;
@@ -12,6 +13,10 @@ every static θ plus DIAL and writes ``report.json`` / ``report.md``;
 versioned model artifact; ``continual`` runs one drifting scenario
 twice — frozen model vs online refit (replay buffer + drift trigger +
 jitted retraining) — and reports the post-failure recovery.
+``fuzz`` generates scenarios deterministically from a seed (topologies,
+workload mixes, disturbance/fault compositions), races DIAL against a
+static-θ grid through the fused batch path, and writes an auto-triaged
+``reports/fuzz/`` of every scenario DIAL loses.
 ``--smoke`` shrinks each to CI size.
 """
 
@@ -98,6 +103,35 @@ def _cmd_continual(args) -> None:
           f"{report['post_tail_gain']:.2f}x)")
 
 
+def _cmd_fuzz(args) -> None:
+    import dataclasses
+
+    from repro.core.model import DIALModel
+    from repro.lab.evaluate import default_model
+    from repro.lab.fuzz import SMOKE, FuzzConfig, run_sweep, write_fuzz_report
+
+    cfg = SMOKE if args.smoke else FuzzConfig()
+    over = {"seed": args.seed}
+    if args.n is not None:
+        over["n_scenarios"] = args.n
+    if args.seconds is not None:
+        over["seconds"] = args.seconds
+    if args.threshold is not None:
+        over["loss_threshold"] = args.threshold
+    cfg = dataclasses.replace(cfg, **over)
+    model = (DIALModel.load(args.model) if args.model
+             else default_model(smoke=args.smoke, root=args.models_root))
+    report = run_sweep(cfg, model)
+    jpath, mpath = write_fuzz_report(report, args.out)
+    s = report["summary"]
+    print(f"{s['n_scenarios']} scenarios, {s['n_buckets']} buckets -> "
+          f"{jpath} / {mpath}")
+    print(f"mean DIAL frac of best static "
+          f"{100 * s['mean_dial_frac_of_best_static']:.1f}%, "
+          f"{s['n_losses']} loss(es) beyond "
+          f"{100 * cfg.loss_threshold:.0f}%")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(prog="python -m repro.lab",
                                  description=__doc__)
@@ -151,9 +185,28 @@ def main(argv=None) -> None:
     ct.add_argument("--smoke", action="store_true",
                     help="CI-sized run (10 s, small refits)")
 
+    fz = sub.add_parser("fuzz", help="seeded scenario fuzzing: generate, "
+                                     "race vs static grid, auto-triage")
+    fz.add_argument("--seed", type=int, default=0)
+    fz.add_argument("--n", type=int, default=None,
+                    help="number of scenarios (default: config's)")
+    fz.add_argument("--seconds", type=float, default=None)
+    fz.add_argument("--threshold", type=float, default=None,
+                    help="triage loss threshold X: flag scenarios where "
+                         "DIAL < (1-X) * best static")
+    fz.add_argument("--model", default=None,
+                    help="DIALModel prefix (default: evaluate's model "
+                         "resolution order)")
+    fz.add_argument("--models-root", default="models/lab")
+    fz.add_argument("--out", default="reports/fuzz")
+    fz.add_argument("--smoke", action="store_true",
+                    help="CI-sized sweep (64 scenarios, 3 s, 6 static "
+                         "arms, two topologies)")
+
     args = ap.parse_args(argv)
     {"list": _cmd_list, "evaluate": _cmd_evaluate,
-     "campaign": _cmd_campaign, "continual": _cmd_continual}[args.cmd](args)
+     "campaign": _cmd_campaign, "continual": _cmd_continual,
+     "fuzz": _cmd_fuzz}[args.cmd](args)
 
 
 if __name__ == "__main__":

@@ -90,6 +90,22 @@ class ScenarioBatch:
                 "total_mbs": read + write}
 
 
+def structure_key(b: BuiltScenario) -> tuple:
+    """The structural signature batch elements must share to stack.
+
+    Physics constants, topology dimensions, and the workload-table shape
+    (rows / waves / flattened stripe entries): two built scenarios with
+    equal keys always stack — and hit the same compiled vmapped program
+    shape — regardless of how their workload parameters, disturbance
+    schedules, or initial knobs differ.  The fuzz sweep
+    (:mod:`repro.lab.fuzz`) groups generated specs by this key so every
+    bucket satisfies :func:`stack_scenarios`'s constraint by
+    construction.
+    """
+    return (b.params, b.topo.n_clients, b.topo.n_osts,
+            len(b.table), b.table.n_waves, len(b.table.entry_row))
+
+
 def stack_scenarios(built: list[BuiltScenario]) -> ScenarioBatch:
     """Stack structurally-identical built scenarios into one batch."""
     if not built:
@@ -102,9 +118,7 @@ def stack_scenarios(built: list[BuiltScenario]) -> ScenarioBatch:
         if (b.topo.n_clients, b.topo.n_osts) != (b0.topo.n_clients,
                                                  b0.topo.n_osts):
             raise ValueError("batch elements must share topology dims")
-        if (len(b.table), b.table.n_waves,
-                len(b.table.entry_row)) != (len(b0.table), b0.table.n_waves,
-                                            len(b0.table.entry_row)):
+        if structure_key(b) != structure_key(b0):
             raise ValueError("batch elements must share workload-table "
                              "structure (rows, waves, stripe entries)")
     return ScenarioBatch(

@@ -1,0 +1,447 @@
+"""Scenario fuzzing: seeded property-based generation + triaged sweeps.
+
+The 10-entry hand-built registry is exactly the kind of curated coverage
+the paper argues against relying on.  This module generates scenarios —
+topology sizes, workload mixes (vpic / bdcats / dlio / random /
+sequential rows), disturbance compositions over the full event
+vocabulary including the Lustre-grounded fault kinds (``ost_fail`` /
+``ost_failover`` / ``client_evict``) — **fully deterministically from
+one seed**, then sweeps them at scale:
+
+1. :func:`generate_spec` draws one :class:`~repro.lab.scenarios.ScenarioSpec`
+   per ``(seed, index)`` pair via an independent ``SeedSequence`` stream,
+   so any scenario of a sweep can be regenerated in isolation;
+2. :func:`run_sweep` groups the generated specs by
+   :func:`~repro.lab.batch.structure_key` — every bucket satisfies
+   ``stack_scenarios``' identical-structure constraint by construction —
+   and runs each bucket through ``run_batch(fused=True)`` with the
+   static-θ arms plus a DIAL-tuned arm per scenario (the best static arm
+   is the per-scenario oracle DIAL is judged against);
+3. auto-triage: every scenario where DIAL loses to best-static by more
+   than ``loss_threshold`` lands in the report's ``triage`` section,
+   deduplicated by spec fingerprint, with the full spec serialized so
+   the continual-learning loop can replay the hard cases
+   (:func:`load_hard_specs`).
+
+Reports are byte-identical across invocations with the same seed and
+model (no timestamps, sorted keys): ``python -m repro.lab fuzz --smoke``
+twice must produce the same ``reports/fuzz/report.json``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import math
+import os
+
+import numpy as np
+
+from repro.core.config_space import SPACE
+from repro.lab.batch import run_batch, stack_scenarios, structure_key
+from repro.lab.scenarios import DisturbanceEvent, ScenarioSpec, build
+from repro.pfs.engine import READ, WRITE
+from repro.pfs.workloads import (Workload, bdcats_read, dlio_reader,
+                                 random_stream, sequential_stream,
+                                 vpic_write)
+
+
+# ---------------------------------------------------------------------- #
+# configuration
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class FuzzConfig:
+    """One sweep's generation + execution + triage parameters.
+
+    ``thetas`` are the static arms each scenario is raced against
+    (empty tuple -> the full 24-point Θ grid, as ``lab evaluate`` uses);
+    ``topologies`` bounds the structural diversity (every extra
+    (clients, osts) pair is at least one more compiled program);
+    ``loss_threshold`` is the triage X: DIAL "loses" a scenario when its
+    throughput is below ``(1 - X) * best_static``.
+    """
+
+    seed: int = 0
+    n_scenarios: int = 512
+    seconds: float = 6.0
+    interval: float = 0.5
+    loss_threshold: float = 0.05
+    min_best_static_mbs: float = 1.0   # skip triage of all-dead scenarios
+    thetas: tuple = ()                 # () -> full SPACE
+    topologies: tuple = ((2, 1), (4, 2), (4, 4), (6, 2))
+    event_kinds: tuple = ("ost_slow", "bg_burst", "nic_slow",
+                          "ost_fail", "ost_failover", "client_evict")
+    min_events: int = 0
+    max_events: int = 3
+    stripe_all_prob: float = 0.5       # row stripes over all OSTs vs one
+    max_batch_elems: int = 256         # chunk buckets beyond this
+    seg_backend: str = "jax"
+
+
+#: CI-sized sweep: 64 scenarios, 3 s each, a 6-point static grid, two
+#: topologies (one compiled program family per structure bucket), every
+#: scenario carrying at least one event so the fault vocabulary is
+#: always exercised.
+SMOKE = FuzzConfig(
+    n_scenarios=64, seconds=3.0,
+    thetas=((16, 1), (64, 2), (256, 8), (1024, 4), (1024, 16), (1024, 32)),
+    topologies=((4, 2), (2, 1)),
+    min_events=1, max_events=2,
+    max_batch_elems=224,
+)
+
+
+# ---------------------------------------------------------------------- #
+# seeded generation
+# ---------------------------------------------------------------------- #
+def _draw_workload(rng, client: int, n_osts: int,
+                   stripe_all_prob: float) -> Workload:
+    """One workload row for ``client``: preset family + jittered params."""
+    all_osts = tuple(range(n_osts))
+    one_ost = (int(rng.integers(n_osts)),)
+    stripe = all_osts if rng.random() < stripe_all_prob else one_ost
+    family = int(rng.integers(6))
+    if family == 0:
+        w = vpic_write(client, dims=int(rng.integers(1, 4)), osts=stripe)
+    elif family == 1:
+        mode = ("partial", "strided", "full")[int(rng.integers(3))]
+        w = bdcats_read(client, mode, osts=stripe)
+    elif family == 2:
+        w = dlio_reader(client, "bert", n_threads=int(rng.integers(1, 5)),
+                        osts=stripe)
+    elif family == 3:
+        w = dlio_reader(client, "megatron",
+                        n_threads=int(rng.integers(1, 5)), osts=stripe)
+    elif family == 4:
+        op = READ if rng.random() < 0.5 else WRITE
+        w = sequential_stream(client, op,
+                              float(2.0 ** rng.integers(17, 25)),
+                              ost=one_ost[0],
+                              n_threads=int(rng.integers(1, 4)))
+    else:
+        op = READ if rng.random() < 0.5 else WRITE
+        w = random_stream(client, op, float(2.0 ** rng.integers(13, 21)),
+                          ost=one_ost[0], n_threads=int(rng.integers(1, 4)))
+    # continuous jitter on top of the preset (same knobs variants() turns)
+    return dataclasses.replace(
+        w,
+        req_size=float(w.req_size) * 2.0 ** rng.uniform(-0.7, 0.7),
+        thread_rate=float(w.thread_rate) * rng.uniform(0.7, 1.3),
+        randomness=float(np.clip(w.randomness + rng.uniform(-0.1, 0.1),
+                                 0.0, 1.0)),
+        period=float(w.period) * rng.uniform(0.8, 1.25),
+    )
+
+
+def _draw_targets(rng, n: int, k_max: int | None = None) -> tuple:
+    k = int(rng.integers(1, (k_max or n) + 1))
+    return tuple(int(x) for x in sorted(rng.choice(n, size=k,
+                                                   replace=False)))
+
+
+def _draw_event(rng, kind: str, n_clients: int, n_osts: int,
+                horizon: float) -> DisturbanceEvent:
+    """One valid event of ``kind`` whose window intersects the run."""
+    start = float(rng.uniform(0.0, 0.55 * horizon))
+    if kind == "ost_slow":
+        end = (math.inf if rng.random() < 0.5
+               else start + float(rng.uniform(0.2, 0.8) * horizon))
+        periodic = rng.random() < 0.4
+        return DisturbanceEvent(
+            kind, targets=_draw_targets(rng, n_osts),
+            magnitude=float(rng.uniform(0.05, 0.7)), start=start, end=end,
+            period=float(rng.uniform(0.5, 2.0)) if periodic else 0.0,
+            duty=float(rng.uniform(0.2, 0.9)) if periodic else 1.0)
+    if kind == "bg_burst":
+        end = (math.inf if rng.random() < 0.5
+               else start + float(rng.uniform(0.2, 0.8) * horizon))
+        periodic = rng.random() < 0.6
+        return DisturbanceEvent(
+            kind, targets=_draw_targets(rng, n_osts),
+            magnitude=float(rng.uniform(100e6, 600e6)), start=start,
+            end=end,
+            period=float(rng.uniform(0.5, 3.0)) if periodic else 0.0,
+            duty=float(rng.uniform(0.2, 0.8)) if periodic else 1.0)
+    if kind == "nic_slow":
+        return DisturbanceEvent(
+            kind, targets=_draw_targets(rng, n_clients,
+                                        k_max=max(1, n_clients - 1)),
+            magnitude=float(rng.uniform(0.05, 0.6)), start=start)
+    if kind == "ost_fail":
+        end = start + float(rng.uniform(0.15, 0.5) * horizon)
+        flapping = rng.random() < 0.3
+        return DisturbanceEvent(
+            kind, targets=_draw_targets(rng, n_osts,
+                                        k_max=max(1, n_osts - 1) if n_osts > 1
+                                        else 1),
+            magnitude=float(rng.choice((0.0, 0.1))), start=start, end=end,
+            period=float(rng.uniform(0.4, 1.5)) if flapping else 0.0,
+            duty=float(rng.uniform(0.3, 0.7)) if flapping else 1.0)
+    if kind == "ost_failover":
+        start = float(rng.uniform(0.15, 0.35) * horizon)
+        end = start + float(rng.uniform(0.15, 0.3) * horizon)
+        return DisturbanceEvent(
+            kind, targets=_draw_targets(rng, n_osts,
+                                        k_max=max(1, n_osts - 1) if n_osts > 1
+                                        else 1),
+            magnitude=0.0, start=start, end=end,
+            recovery=float(rng.uniform(0.2, 0.5) * horizon))
+    if kind == "client_evict":
+        end = start + float(rng.uniform(0.2, 0.6) * horizon)
+        return DisturbanceEvent(
+            kind, targets=_draw_targets(rng, n_clients,
+                                        k_max=max(1, n_clients // 2)),
+            magnitude=0.0, start=start, end=end)
+    raise ValueError(f"unknown event kind {kind!r}")
+
+
+def generate_spec(cfg: FuzzConfig, index: int) -> ScenarioSpec:
+    """Scenario ``index`` of the sweep — a pure function of
+    ``(cfg.seed, index)`` via an independent SeedSequence stream."""
+    rng = np.random.default_rng(
+        np.random.SeedSequence((int(cfg.seed), int(index))))
+    n_clients, n_osts = cfg.topologies[int(rng.integers(len(cfg.topologies)))]
+    workloads = tuple(_draw_workload(rng, c, n_osts, cfg.stripe_all_prob)
+                      for c in range(n_clients))
+    n_events = int(rng.integers(cfg.min_events, cfg.max_events + 1))
+    events = tuple(
+        _draw_event(rng,
+                    cfg.event_kinds[int(rng.integers(len(cfg.event_kinds)))],
+                    n_clients, n_osts, cfg.seconds)
+        for _ in range(n_events))
+    configs = SPACE.configs()
+    theta = configs[int(rng.integers(len(configs)))]
+    return ScenarioSpec(
+        name=f"fuzz_{cfg.seed}_{index}",
+        n_clients=n_clients, n_osts=n_osts,
+        workloads=workloads, events=events,
+        initial_theta=(int(theta[0]), int(theta[1])),
+        seed=index,
+        description=f"generated (seed={cfg.seed}, index={index})",
+        tags=("fuzz",) + tuple(sorted({ev.kind for ev in events})),
+    )
+
+
+def generate_specs(cfg: FuzzConfig) -> list[ScenarioSpec]:
+    return [generate_spec(cfg, i) for i in range(cfg.n_scenarios)]
+
+
+# ---------------------------------------------------------------------- #
+# spec serialization + fingerprinting
+# ---------------------------------------------------------------------- #
+def _event_dict(ev: DisturbanceEvent) -> dict:
+    d = dataclasses.asdict(ev)
+    d["targets"] = list(d["targets"])
+    d["end"] = None if math.isinf(ev.end) else ev.end   # JSON-safe inf
+    return d
+
+
+def spec_to_dict(spec: ScenarioSpec) -> dict:
+    """JSON-safe serialization of everything that defines the physics
+    (name/description/tags excluded — they don't affect the run)."""
+    return {
+        "n_clients": spec.n_clients,
+        "n_osts": spec.n_osts,
+        "initial_theta": [int(x) for x in spec.initial_theta],
+        "workloads": [
+            {**dataclasses.asdict(w), "osts": list(w.osts)}
+            for w in spec.workloads],
+        "events": [_event_dict(ev) for ev in spec.events],
+    }
+
+
+def spec_from_dict(d: dict, name: str = "replayed") -> ScenarioSpec:
+    """Inverse of :func:`spec_to_dict` (for replaying triaged specs)."""
+    workloads = tuple(
+        Workload(**{**w, "osts": tuple(w["osts"])}) for w in d["workloads"])
+    events = tuple(
+        DisturbanceEvent(**{**e, "targets": tuple(e["targets"]),
+                            "end": math.inf if e["end"] is None else e["end"]})
+        for e in d["events"])
+    return ScenarioSpec(name=name, n_clients=d["n_clients"],
+                        n_osts=d["n_osts"], workloads=workloads,
+                        events=events,
+                        initial_theta=tuple(d["initial_theta"]),
+                        tags=("fuzz", "replayed"))
+
+
+def fingerprint(spec: ScenarioSpec) -> str:
+    """Stable content hash of the physics — the triage dedup key."""
+    blob = json.dumps(spec_to_dict(spec), sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------- #
+# the sweep
+# ---------------------------------------------------------------------- #
+def _run_bucket(specs_ix, thetas, model, cfg: FuzzConfig) -> list[dict]:
+    """Race every scenario of one structural bucket: static arms + DIAL.
+
+    ``specs_ix`` is ``[(index, spec), ...]``; buckets beyond
+    ``max_batch_elems`` elements run as several equally-structured
+    chunks (chunking never changes a scenario's result — elements are
+    independent under vmap).
+    """
+    m = len(thetas)
+    arms = m + 1
+    per_chunk = max(1, cfg.max_batch_elems // arms)
+    rows = []
+    for lo in range(0, len(specs_ix), per_chunk):
+        chunk = specs_ix[lo:lo + per_chunk]
+        built = []
+        for _, spec in chunk:
+            for th in thetas:
+                built.append(build(dataclasses.replace(
+                    spec, initial_theta=(int(th[0]), int(th[1])))))
+            built.append(build(spec))          # the DIAL arm
+        batch = stack_scenarios(built)
+        n = batch.n_osc
+        dial_cols = np.concatenate(
+            [(j * arms + m) * n + np.arange(n) for j in range(len(chunk))])
+        result = run_batch(batch, model=model, seconds=cfg.seconds,
+                           interval=cfg.interval,
+                           seg_backend=cfg.seg_backend,
+                           tune_cols=dial_cols, fused=True)
+        tput = batch.throughput(cfg.seconds)["total_mbs"]
+        changes = np.zeros(len(chunk), dtype=int)
+        for r in result.decisions:
+            if len(r):
+                np.add.at(changes, r.oscs // n // arms,
+                          r.decisions.changed.astype(int))
+        for j, (index, spec) in enumerate(chunk):
+            static = tput[j * arms:j * arms + m]
+            best = int(np.argmax(static))
+            dial_mbs = float(tput[j * arms + m])
+            best_mbs = float(static[best])
+            rows.append({
+                "index": index,
+                "name": spec.name,
+                "fingerprint": fingerprint(spec),
+                "n_clients": spec.n_clients,
+                "n_osts": spec.n_osts,
+                "initial_theta": [int(x) for x in spec.initial_theta],
+                "event_kinds": sorted({ev.kind for ev in spec.events}),
+                "dial_mbs": dial_mbs,
+                "best_static_mbs": best_mbs,
+                "best_static_theta": [int(x) for x in thetas[best]],
+                "dial_frac_of_best_static": dial_mbs / max(best_mbs, 1e-9),
+                "changes": int(changes[j]),
+            })
+    return rows
+
+
+def run_sweep(cfg: FuzzConfig, model) -> dict:
+    """Generate, bucket, race, triage.  Deterministic from ``cfg.seed``
+    and the model; the returned report dict serializes byte-identically
+    across invocations."""
+    specs = generate_specs(cfg)
+    thetas = [tuple(int(x) for x in t)
+              for t in (cfg.thetas or SPACE.configs())]
+
+    buckets: dict = {}
+    for i, spec in enumerate(specs):
+        key = structure_key(build(spec))
+        buckets.setdefault(key, []).append((i, spec))
+
+    rows = []
+    # params (key[0]) is shared; order buckets by the numeric signature
+    for key in sorted(buckets, key=lambda k: tuple(k[1:])):
+        rows.extend(_run_bucket(buckets[key], thetas, model, cfg))
+    rows.sort(key=lambda r: r["index"])
+
+    losses, seen = [], set()
+    for r in rows:
+        losing = (r["best_static_mbs"] >= cfg.min_best_static_mbs
+                  and r["dial_mbs"] < (1.0 - cfg.loss_threshold)
+                  * r["best_static_mbs"])
+        if losing and r["fingerprint"] not in seen:
+            seen.add(r["fingerprint"])
+            losses.append({**r, "spec": spec_to_dict(specs[r["index"]])})
+    losses.sort(key=lambda r: (r["dial_frac_of_best_static"], r["index"]))
+
+    fracs = [r["dial_frac_of_best_static"] for r in rows]
+    return {
+        "config": {
+            **{k: v for k, v in dataclasses.asdict(cfg).items()
+               if k not in ("thetas", "topologies", "event_kinds")},
+            "thetas": [list(t) for t in thetas],
+            "topologies": [list(t) for t in cfg.topologies],
+            "event_kinds": list(cfg.event_kinds),
+        },
+        "summary": {
+            "n_scenarios": len(rows),
+            "n_buckets": len(buckets),
+            "n_unique_specs": len({r["fingerprint"] for r in rows}),
+            "n_losses": len(losses),
+            "mean_dial_frac_of_best_static": float(np.mean(fracs)),
+            "min_dial_frac_of_best_static": float(np.min(fracs)),
+        },
+        "scenarios": rows,
+        "triage": {
+            "loss_threshold": cfg.loss_threshold,
+            "losses": losses,
+        },
+    }
+
+
+# ---------------------------------------------------------------------- #
+# report IO + hard-case feed
+# ---------------------------------------------------------------------- #
+def render_markdown(report: dict) -> str:
+    s = report["summary"]
+    cfg = report["config"]
+    lines = [
+        "# Fuzz sweep triage",
+        "",
+        f"{s['n_scenarios']} generated scenarios "
+        f"({s['n_unique_specs']} unique, {s['n_buckets']} structural "
+        f"buckets), seed {cfg['seed']}, {cfg['seconds']:.0f} s each, "
+        f"{len(cfg['thetas'])} static arms.",
+        "",
+        f"DIAL fraction of best-static: mean "
+        f"**{100 * s['mean_dial_frac_of_best_static']:.1f}%**, min "
+        f"{100 * s['min_dial_frac_of_best_static']:.1f}%.  "
+        f"**{s['n_losses']}** scenario(s) lose by more than "
+        f"{100 * report['triage']['loss_threshold']:.0f}%.",
+        "",
+    ]
+    if report["triage"]["losses"]:
+        lines += [
+            "| scenario | topo | events | θ₀ | DIAL MB/s | "
+            "best static MB/s (θ) | DIAL/best | fingerprint |",
+            "|---|---|---|---|---|---|---|---|",
+        ]
+        for r in report["triage"]["losses"]:
+            th = "×".join(str(x) for x in r["best_static_theta"])
+            t0 = "×".join(str(x) for x in r["initial_theta"])
+            ev = ",".join(r["event_kinds"]) or "—"
+            lines.append(
+                f"| {r['name']} | {r['n_clients']}c×{r['n_osts']}ost | "
+                f"{ev} | {t0} | {r['dial_mbs']:.1f} | "
+                f"{r['best_static_mbs']:.1f} ({th}) | "
+                f"{100 * r['dial_frac_of_best_static']:.1f}% | "
+                f"`{r['fingerprint']}` |")
+        lines.append("")
+    return "\n".join(lines)
+
+
+def write_fuzz_report(report: dict, out_dir: str) -> tuple[str, str]:
+    os.makedirs(out_dir, exist_ok=True)
+    jpath = os.path.join(out_dir, "report.json")
+    mpath = os.path.join(out_dir, "report.md")
+    with open(jpath, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    with open(mpath, "w") as f:
+        f.write(render_markdown(report))
+    return jpath, mpath
+
+
+def load_hard_specs(path: str) -> list[ScenarioSpec]:
+    """Triaged losing scenarios from a report.json, rebuilt as specs —
+    the hard-case feed for the continual-learning loop."""
+    with open(path) as f:
+        report = json.load(f)
+    return [spec_from_dict(r["spec"], name=r["name"])
+            for r in report["triage"]["losses"]]

@@ -14,12 +14,34 @@ directly.  They are expressed as piecewise/periodic events compiled into
 per-tick arrays (a pure function of the absolute tick index, so interval
 boundaries and backends cannot disagree):
 
-    ``ost_slow``   scale an OST's bandwidth *and* setup/IOPS capacity
-                   (a sick or failing disk is slow at both);
-    ``bg_burst``   background bytes/s arriving at an OST from clients
-                   outside the simulated fleet (noisy neighbours) — they
-                   are served first and inflate the congestion queue;
-    ``nic_slow``   scale a client's NIC ceiling (heterogeneous links).
+    ``ost_slow``      scale an OST's bandwidth *and* setup/IOPS capacity
+                      (a sick or failing disk is slow at both);
+    ``bg_burst``      background bytes/s arriving at an OST from clients
+                      outside the simulated fleet (noisy neighbours) —
+                      they are served first and inflate the congestion
+                      queue;
+    ``nic_slow``      scale a client's NIC ceiling (heterogeneous links).
+
+Plus the Lustre-grounded fault vocabulary (shine's client/OST state
+machine: MOUNTED -> OFFLINE / CLIENT_ERROR, failover and recovery):
+
+    ``ost_fail``      hard OST outage: bandwidth and IOPS scale to
+                      ``magnitude`` (default 0 — OFFLINE) inside the
+                      window, snapping back when it closes.  Periodic
+                      windows model a flapping target;
+    ``ost_failover``  fail, then ramp linearly back to full capacity
+                      over a ``recovery``-second window after ``end``
+                      (failback onto a cold target is never instant:
+                      cache warmup, recovery windows, resync);
+    ``client_evict``  the OST view of a client eviction: the client's
+                      NIC scale drops to ``magnitude`` (default 0), so
+                      its queued demand stalls until reconnection.
+
+All kinds compile through :func:`make_schedule` into the same three
+:class:`~repro.pfs.state.Disturbance` fields (``bw_scale`` /
+``iops_scale`` / ``nic_scale`` / ``bg_bytes``), so the numpy oracle, the
+fused scan, and the device-resident loop consume them with zero engine
+changes.
 
 The registry at the bottom names the paper evaluation setups
 (vpic / bdcats / dlio / filebench) and beyond-paper stress scenarios;
@@ -45,6 +67,15 @@ from repro.pfs.workloads import (Workload, WorkloadState, WorkloadTable,
 # ---------------------------------------------------------------------- #
 # disturbance events -> per-tick schedules
 # ---------------------------------------------------------------------- #
+# kinds whose targets index OSTs vs clients, and kinds that express a
+# capacity *outage* (scale drops toward 0 inside the window) vs a
+# steady-state degradation
+EVENT_KINDS = ("ost_slow", "bg_burst", "nic_slow",
+               "ost_fail", "ost_failover", "client_evict")
+CLIENT_KINDS = ("nic_slow", "client_evict")
+FAULT_KINDS = ("ost_fail", "ost_failover", "client_evict")
+
+
 @dataclasses.dataclass(frozen=True)
 class DisturbanceEvent:
     """One piecewise/periodic exogenous condition.
@@ -52,22 +83,116 @@ class DisturbanceEvent:
     Active on ticks whose time ``t`` satisfies ``start <= t < end`` and,
     when ``period > 0``, ``(t - start) mod period < duty * period``
     (square-wave bursting).  ``magnitude`` is a scale factor for the
-    ``*_slow`` kinds and background bytes/second for ``bg_burst``.
+    ``*_slow`` kinds, background bytes/second for ``bg_burst``, and the
+    residual capacity fraction during the outage for the fault kinds
+    (``ost_fail`` / ``ost_failover`` / ``client_evict``, default 0 —
+    hard offline).  ``recovery`` (``ost_failover`` only) is the number
+    of seconds after ``end`` the target takes to ramp linearly from
+    ``magnitude`` back to full capacity.
+
+    Construction validates every field — a malformed event raises
+    ``ValueError`` here, at the event/spec boundary, instead of passing
+    silently into :func:`make_schedule` or crashing deep inside it.
     """
 
-    kind: str                 # "ost_slow" | "bg_burst" | "nic_slow"
-    targets: tuple            # OST ids (ost_*/bg_*) or client ids (nic_*)
-    magnitude: float
+    kind: str                 # one of EVENT_KINDS
+    targets: tuple            # OST ids, or client ids for CLIENT_KINDS
+    magnitude: float = 0.0
     start: float = 0.0        # seconds
     end: float = math.inf
     period: float = 0.0       # 0 -> constant while inside [start, end)
     duty: float = 1.0
+    recovery: float = 0.0     # seconds; ost_failover ramp-back window
+
+    def __post_init__(self):
+        if self.kind not in EVENT_KINDS:
+            raise ValueError(f"unknown disturbance kind {self.kind!r}; "
+                             f"known: {', '.join(EVENT_KINDS)}")
+        tgts = tuple(self.targets)
+        if not tgts:
+            raise ValueError(f"{self.kind}: empty targets — an event must "
+                             "name at least one OST/client id")
+        if any((not float(x).is_integer()) or x < 0 for x in tgts):
+            raise ValueError(f"{self.kind}: targets must be non-negative "
+                             f"integer ids, got {tgts!r}")
+        if not (math.isfinite(self.magnitude) and self.magnitude >= 0):
+            raise ValueError(f"{self.kind}: magnitude must be finite and "
+                             f">= 0, got {self.magnitude!r}")
+        if self.kind in ("ost_slow", "nic_slow") and self.magnitude == 0:
+            raise ValueError(f"{self.kind}: magnitude must be > 0 (use "
+                             "ost_fail/client_evict for a hard outage)")
+        if self.kind in FAULT_KINDS and self.magnitude >= 1.0:
+            raise ValueError(f"{self.kind}: residual capacity magnitude "
+                             f"must be < 1, got {self.magnitude!r}")
+        if not (math.isfinite(self.start) and self.start >= 0):
+            raise ValueError(f"{self.kind}: start must be finite and >= 0, "
+                             f"got {self.start!r}")
+        if not self.end > self.start:
+            raise ValueError(f"{self.kind}: end ({self.end!r}) must be > "
+                             f"start ({self.start!r})")
+        if not (math.isfinite(self.period) and self.period >= 0):
+            raise ValueError(f"{self.kind}: period must be finite and "
+                             f">= 0, got {self.period!r}")
+        if not 0.0 < self.duty <= 1.0:
+            raise ValueError(f"{self.kind}: duty must be in (0, 1], got "
+                             f"{self.duty!r}")
+        if not (math.isfinite(self.recovery) and self.recovery >= 0):
+            raise ValueError(f"{self.kind}: recovery must be finite and "
+                             f">= 0, got {self.recovery!r}")
+        if self.kind == "ost_failover":
+            if self.recovery <= 0:
+                raise ValueError("ost_failover: recovery must be > 0 — a "
+                                 "zero-length ramp is ost_fail")
+            if not math.isfinite(self.end):
+                raise ValueError("ost_failover: end must be finite (the "
+                                 "ramp starts when the outage ends)")
+            if self.period > 0:
+                raise ValueError("ost_failover: period must be 0 (a ramp "
+                                 "after a square wave is ill-defined; "
+                                 "use periodic ost_fail for flapping)")
+        elif self.recovery != 0:
+            raise ValueError(f"{self.kind}: recovery only applies to "
+                             "ost_failover")
 
     def active(self, t: np.ndarray) -> np.ndarray:
         act = (t >= self.start) & (t < self.end)
         if self.period > 0:
             act &= np.mod(t - self.start, self.period) < self.duty * self.period
         return act
+
+    def capacity_scale(self, t: np.ndarray) -> np.ndarray:
+        """Per-tick capacity multiplier for the fault kinds.
+
+        ``magnitude`` inside the active window, 1 outside; ost_failover
+        additionally ramps linearly from ``magnitude`` at ``end`` to 1
+        at ``end + recovery`` instead of snapping back.
+        """
+        scale = np.where(self.active(t), self.magnitude, 1.0)
+        if self.kind == "ost_failover":
+            frac = (t - self.end) / self.recovery
+            in_ramp = (t >= self.end) & (frac < 1.0)
+            scale = np.where(
+                in_ramp, self.magnitude + (1.0 - self.magnitude) * frac,
+                scale)
+        return scale
+
+
+def validate_events(events, topo: SimTopo) -> None:
+    """Check every event's target ids against a topology.
+
+    Field-level validation happens at event construction; this is the
+    spec-level half — an OST id >= ``n_osts`` (or client id >=
+    ``n_clients``) would otherwise scatter out of bounds inside
+    :func:`make_schedule`.
+    """
+    for ev in events:
+        n = (topo.n_clients if ev.kind in CLIENT_KINDS else topo.n_osts)
+        what = "client" if ev.kind in CLIENT_KINDS else "OST"
+        bad = [x for x in ev.targets if not 0 <= int(x) < n]
+        if bad:
+            raise ValueError(
+                f"{ev.kind}: {what} target ids {bad} out of range for a "
+                f"{topo.n_clients}-client x {topo.n_osts}-OST topology")
 
 
 def make_schedule(events, topo: SimTopo, params: SimParams,
@@ -78,23 +203,28 @@ def make_schedule(events, topo: SimTopo, params: SimParams,
     consecutive intervals tile seamlessly and every backend sees the
     identical exogenous world.
     """
+    validate_events(events, topo)
     t = (t0_tick + np.arange(n_ticks)) * params.tick
     sched = Disturbance.neutral(topo, n_ticks=n_ticks)
     for ev in events:
-        act = ev.active(t)
         cols = np.asarray(ev.targets, dtype=np.int64)
         if ev.kind == "ost_slow":
-            scale = np.where(act, ev.magnitude, 1.0)[:, None]
+            scale = np.where(ev.active(t), ev.magnitude, 1.0)[:, None]
+            sched.bw_scale[:, cols] *= scale
+            sched.iops_scale[:, cols] *= scale
+        elif ev.kind in ("ost_fail", "ost_failover"):
+            scale = ev.capacity_scale(t)[:, None]
             sched.bw_scale[:, cols] *= scale
             sched.iops_scale[:, cols] *= scale
         elif ev.kind == "bg_burst":
-            sched.bg_bytes[:, cols] += (act * ev.magnitude
+            sched.bg_bytes[:, cols] += (ev.active(t) * ev.magnitude
                                         * params.tick)[:, None]
         elif ev.kind == "nic_slow":
-            sched.nic_scale[:, cols] *= np.where(act, ev.magnitude,
+            sched.nic_scale[:, cols] *= np.where(ev.active(t), ev.magnitude,
                                                  1.0)[:, None]
-        else:
-            raise ValueError(f"unknown disturbance kind {ev.kind!r}")
+        else:                            # client_evict (kinds are closed
+            scale = ev.capacity_scale(t)[:, None]        # at construction)
+            sched.nic_scale[:, cols] *= scale
     return sched
 
 
@@ -153,6 +283,7 @@ def build(spec: ScenarioSpec, params: SimParams | None = None) -> BuiltScenario:
     """Materialize a spec: topology, frozen workload table, fresh state."""
     params = params or SimParams()
     topo = SimTopo.dense(spec.n_clients, spec.n_osts)
+    validate_events(spec.events, topo)
     state = init_state(topo)
     w, f = spec.initial_theta
     state.window_pages[:] = int(w)
@@ -161,6 +292,24 @@ def build(spec: ScenarioSpec, params: SimParams | None = None) -> BuiltScenario:
     wstate = table.init_wstate(state)
     return BuiltScenario(spec=spec, params=params, topo=topo, table=table,
                          state=state, wstate=wstate)
+
+
+def _jitter_event(ev: DisturbanceEvent, rng) -> DisturbanceEvent:
+    """One structure-preserving event jitter (same rng draw order as the
+    historical inline version: one magnitude draw, one phase draw)."""
+    if ev.kind == "bg_burst":
+        mag = ev.magnitude * rng.uniform(0.6, 1.4)
+    elif ev.kind in FAULT_KINDS:
+        # residual capacity stays a valid outage fraction (< 1)
+        mag = float(np.clip(ev.magnitude * rng.uniform(0.7, 1.3), 0.0, 0.9))
+    else:
+        mag = float(np.clip(ev.magnitude * rng.uniform(0.7, 1.3), 0.01, 1.0))
+    shift = rng.uniform(0.0, 0.5)
+    # shift the whole window so finite-end events keep their duration
+    # (start-only jitter could cross `end` and fail validation)
+    end = ev.end if math.isinf(ev.end) else ev.end + shift
+    return dataclasses.replace(ev, magnitude=mag, start=ev.start + shift,
+                               end=end)
 
 
 def variants(spec: ScenarioSpec, n: int, seed: int = 0) -> list[ScenarioSpec]:
@@ -183,14 +332,7 @@ def variants(spec: ScenarioSpec, n: int, seed: int = 0) -> list[ScenarioSpec]:
                                      0.0, 1.0)),
             period=float(w.period) * rng.uniform(0.8, 1.25),
         ) for w in spec.workloads)
-        evs = tuple(dataclasses.replace(
-            ev,
-            magnitude=(ev.magnitude * rng.uniform(0.6, 1.4)
-                       if ev.kind == "bg_burst"
-                       else float(np.clip(ev.magnitude * rng.uniform(0.7, 1.3),
-                                          0.01, 1.0))),
-            start=ev.start + rng.uniform(0.0, 0.5),
-        ) for ev in spec.events)
+        evs = tuple(_jitter_event(ev, rng) for ev in spec.events)
         out.append(dataclasses.replace(
             spec, name=f"{spec.name}#{i}", workloads=wls, events=evs,
             seed=spec.seed + 1 + i))
@@ -321,6 +463,38 @@ register(ScenarioSpec(
     description="Failing OST: stripe target 0 collapses to 5% capacity "
                 "at t=3 s and never recovers.",
     tags=("beyond-paper", "degraded-ost"),
+))
+
+register(ScenarioSpec(
+    name="failover_ost",
+    n_clients=4, n_osts=4,
+    workloads=tuple(bdcats_read(c, ("partial", "strided")[c % 2],
+                                osts=(0, 1, 2, 3)) for c in range(4)),
+    events=(
+        DisturbanceEvent("ost_failover", targets=(0,), start=2.0, end=4.0,
+                         recovery=3.0),
+    ),
+    description="OST failover: stripe target 0 goes OFFLINE at t=2 s "
+                "(shine MOUNTED->OFFLINE), fails back at t=4 s and ramps "
+                "to full capacity over 3 s — failback onto a cold target "
+                "is never instant.",
+    tags=("beyond-paper", "fault", "failover"),
+))
+
+register(ScenarioSpec(
+    name="client_eviction",
+    n_clients=6, n_osts=2,
+    workloads=tuple(dlio_reader(c, "bert", n_threads=2 + c % 3,
+                                osts=(c % 2,)) for c in range(6)),
+    events=(
+        DisturbanceEvent("client_evict", targets=(1, 4), start=2.0,
+                         end=5.0),
+    ),
+    description="Client eviction: clients 1 and 4 hit CLIENT_ERROR at "
+                "t=2 s — NIC scale 0, queued demand stalls — and "
+                "reconnect at t=5 s; survivors inherit the freed "
+                "capacity and their optima shift twice.",
+    tags=("beyond-paper", "fault", "eviction"),
 ))
 
 register(ScenarioSpec(

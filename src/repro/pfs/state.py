@@ -273,10 +273,15 @@ class Disturbance:
 @functools.lru_cache(maxsize=64)
 def _neutral_cached(n_osts: int, n_clients: int) -> Disturbance:
     """Shared identity Disturbance per topology size — the undisturbed
-    per-tick oracle path must not pay four allocations per call.  Callers
-    never mutate a Disturbance, so sharing is safe."""
-    return Disturbance(bw_scale=np.ones(n_osts), iops_scale=np.ones(n_osts),
-                       bg_bytes=np.zeros(n_osts), nic_scale=np.ones(n_clients))
+    per-tick oracle path must not pay four allocations per call.  The
+    cached arrays are frozen (``writeable=False``): an in-place edit by
+    any caller would silently corrupt every later tick that reuses the
+    cache, so mutation raises instead."""
+    d = Disturbance(bw_scale=np.ones(n_osts), iops_scale=np.ones(n_osts),
+                    bg_bytes=np.zeros(n_osts), nic_scale=np.ones(n_clients))
+    for f in _DISTURBANCE_FIELDS:
+        getattr(d, f).flags.writeable = False
+    return d
 
 
 # Register the state dataclasses as JAX pytrees when jax is importable so
