@@ -1,6 +1,6 @@
 PY ?= python
 
-.PHONY: verify deps bench-fleet bench-train bench-loop bench-json lab-smoke continual-smoke fuzz-smoke
+.PHONY: verify deps bench-fleet bench-train bench-loop bench-weak bench-json lab-smoke continual-smoke fuzz-smoke
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -18,9 +18,14 @@ bench-train:
 bench-loop:
 	PYTHONPATH=src $(PY) benchmarks/loop_scaling.py --quick
 
+# weak-scaling fleet: tuned interfaces/sec vs (forced host) device count
+bench-weak:
+	PYTHONPATH=src $(PY) benchmarks/fleet_weak_scaling.py
+
 # full benchmark sweep + machine-readable perf record
+# (repo root on PYTHONPATH: run.py imports its siblings as benchmarks.*)
 bench-json:
-	PYTHONPATH=src $(PY) benchmarks/run.py --json reports/BENCH_latest.json
+	PYTHONPATH=src:. $(PY) benchmarks/run.py --json reports/BENCH_latest.json
 
 # CI-sized scenario-catalog sweep (writes reports/lab/report.{json,md})
 lab-smoke:

@@ -105,6 +105,30 @@ def main(argv=None) -> None:
              "exact_forests_per_s": round(rt["exact_forests_per_s"], 2),
              "fast_speedup": round(rt["fast_speedup"], 1)})
 
+    # a fresh process: the weak-scaling sweep forces host devices via
+    # XLA_FLAGS, which only takes effect before jax initializes — and
+    # the benchmarks above already initialized it here
+    import os
+    import subprocess
+    import sys
+
+    t0 = time.time()
+    out = subprocess.run(
+        [sys.executable,
+         os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "fleet_weak_scaling.py"), "--json"],
+        capture_output=True, text=True, check=True)
+    el = time.time() - t0
+    wk = json.loads(out.stdout.strip().splitlines()[-1])
+    last, probe = wk["points"][-1], wk["max_fleet"]
+    _record(records, "fleet_weak_scaling", el * 1e6,
+            {"max_devices": last["devices"],
+             "if_intervals_per_s": last["if_intervals_per_s"],
+             "speedup_vs_1dev": last["speedup_vs_1dev"],
+             "host_cores": wk["host_cores"],
+             "max_fleet_interfaces": probe["interfaces"],
+             "max_fleet_seconds": probe["seconds"]})
+
     if args.json:
         import os
 

@@ -326,7 +326,8 @@ class FleetAgent:
 def run_fleet(sim, model: DIALModel, oscs=None, seconds: float = 10.0,
               interval: float = 0.5, measure_overhead: bool = False,
               tuner_params: TunerParams | None = None,
-              backend: str = "numpy", seg_backend: str = "auto") -> FleetAgent:
+              backend: str = "numpy", seg_backend: str = "auto",
+              mesh=None) -> FleetAgent:
     """Drive the simulator with one fleet agent over ``oscs`` (default
     all interfaces) — the batched counterpart of ``run_with_agents``.
 
@@ -345,10 +346,22 @@ def run_fleet(sim, model: DIALModel, oscs=None, seconds: float = 10.0,
       decision path (snapshot differencing, featurization, forest
       scoring, Algorithm 1, knob write-back) execute as one jitted
       dispatch covering every interval of the run.
+    * ``"jax-sharded"`` — the fused loop dispatched through a 1-D device
+      mesh (``mesh``, default :func:`repro.distributed.sharding.fleet_mesh`
+      over all local devices): the sim is lifted to a one-element batch
+      and run through the ``shard_map``-partitioned program.  One sim's
+      interfaces share OSTs (coupled inside the engine), so a single sim
+      still lands on one device — this backend exists to exercise and
+      pin the sharded dispatch end to end; real scale-out shards *many*
+      sims/fleet-slices via ``run_batch(fused=True, mesh=...)``
+      (benchmarks/fleet_weak_scaling.py).
 
     Decisions and knob trajectories are identical on every backend —
-    only the execution schedule changes (tests/test_loop_fused.py).
+    only the execution schedule changes (tests/test_loop_fused.py,
+    tests/test_shard.py).
     """
+    if mesh is not None and backend != "jax-sharded":
+        raise ValueError("mesh only applies to backend='jax-sharded'")
     fleet = FleetAgent(SimFleetPort(sim, oscs), model,
                        tuner_params=tuner_params,
                        measure_overhead=measure_overhead)
@@ -393,6 +406,47 @@ def run_fleet(sim, model: DIALModel, oscs=None, seconds: float = 10.0,
         tune_mask[fleet.oscs] = True
         result = loop.run(table, sim.state, wstate, n_intervals,
                           tune_mask=tune_mask)
+        sim.state = result.state
+        sync_workloads_from_table(sim, result.wstate)
+        fleet.ingest_fused(result)
+    elif backend == "jax-sharded":
+        import jax
+
+        from repro.distributed.sharding import fleet_mesh
+        from repro.pfs.loop_jax import FusedLoop
+        from repro.pfs.workloads import (sync_workloads_from_table,
+                                         table_from_sim)
+
+        if measure_overhead:
+            raise ValueError(
+                "measure_overhead requires per-interval host timing; "
+                "inside the single fused dispatch there is nothing to "
+                "time per stage — use backend='numpy' or 'jax'")
+        if mesh is None:
+            mesh = fleet_mesh()
+        table, wstate = table_from_sim(sim)
+        loop = FusedLoop(sim.params, sim.topo, steps_per_interval, model,
+                         space=fleet.space, tuner_params=fleet.tuner_params,
+                         k=fleet.k, min_volume_bytes=fleet.min_volume,
+                         warmup_intervals=fleet.warmup,
+                         seg_backend=seg_backend, batched=True, mesh=mesh)
+        # lift to a one-element batch (scalars -> (1,) leaves), run the
+        # sharded program, drop the batch axis again
+        lift = lambda tree: jax.tree.map(
+            lambda a: np.stack([np.asarray(a)]), tree)
+        tune_mask = np.zeros((1, sim.n_osc), dtype=bool)
+        tune_mask[0, fleet.oscs] = True
+        result = loop.run(lift(table), lift(sim.state), lift(wstate),
+                          n_intervals, tune_mask=tune_mask)
+        drop = lambda tree: jax.tree.map(lambda a: np.asarray(a)[0], tree)
+        state = drop(result.state)
+        state.now = float(state.now)
+        state.tick_index = int(state.tick_index)
+        result = dataclasses.replace(
+            result, state=state, wstate=drop(result.wstate),
+            trace=(drop(result.trace) if result.trace is not None
+                   else None),
+            hist=(drop(result.hist) if result.hist is not None else None))
         sim.state = result.state
         sync_workloads_from_table(sim, result.wstate)
         fleet.ingest_fused(result)

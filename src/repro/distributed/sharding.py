@@ -1,4 +1,5 @@
-"""Sharding rules: parameters, optimizer state (ZeRO-1), batches, caches.
+"""Sharding rules: parameters, optimizer state (ZeRO-1), batches, caches —
+and the DIAL fleet axis.
 
 Mesh axes: ``('data', 'model')`` single-pod, ``('pod', 'data', 'model')``
 multi-pod.  Batch and gradient reduction use (pod, data); tensor
@@ -8,6 +9,17 @@ Rules are keyed by parameter *name* (the innermost dict key), matching the
 layouts in repro.models.*; stacked (scanned) layers get a leading
 replicated dim.  ZeRO-1 additionally shards optimizer moments over the
 data axes along the largest replicated-and-divisible dimension.
+
+The **fleet axis** (:data:`FLEET_AXIS`) is the simulator-side counterpart:
+the leading batch/interface axis of a stacked scenario batch
+(:mod:`repro.lab.batch`) or fused decision loop
+(:mod:`repro.pfs.loop_jax`).  Every DIAL decision reads only its own
+interface's local counters — the paper's decentralization — so the fleet
+axis partitions with **no collectives**: each device shard runs its own
+engine ticks, probe differencing, forest scoring, and Algorithm 1
+entirely device-local.  The helpers here build the 1-D mesh, the
+``P('fleet')`` spec trees, and the pad/unpad used when a batch does not
+divide the device count.
 """
 
 from __future__ import annotations
@@ -139,6 +151,90 @@ def zero1_pspecs(params, pspecs, mesh: Mesh) -> dict:
         return P(*spec)
 
     return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ---------------------------------------------------------------------- #
+# the DIAL fleet axis: batch/interface sharding for the fused loop
+# ---------------------------------------------------------------------- #
+FLEET_AXIS = "fleet"
+
+
+def fleet_mesh(n_devices: int | None = None, *, devices=None) -> Mesh:
+    """1-D mesh over local devices for the batch/interface axis.
+
+    Every array the fused loop shards carries the scenario-batch axis
+    leading, so one axis name is all the partitioning needs.  Default:
+    all local devices (on CPU, force more with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* jax
+    initializes — the pattern :mod:`repro.launch.dryrun` uses).
+    """
+    if devices is None:
+        devices = jax.devices()
+        if n_devices is not None:
+            if n_devices > len(devices):
+                raise ValueError(
+                    f"fleet mesh wants {n_devices} devices but only "
+                    f"{len(devices)} are visible (force host devices "
+                    f"with --xla_force_host_platform_device_count)")
+            devices = devices[:n_devices]
+    return Mesh(np.asarray(devices), (FLEET_AXIS,))
+
+
+def fleet_pspec() -> P:
+    """Leading-axis spec of every fleet-sharded array (trailing dims —
+    ops, interfaces, workload rows, ticks — stay device-local)."""
+    return P(FLEET_AXIS)
+
+
+def fleet_specs(tree):
+    """A ``P('fleet')`` for every leaf of a stacked scenario pytree
+    (``SimState`` / ``WorkloadTable`` / ``WorkloadState`` / disturbance
+    schedule — all their leaves carry the batch axis leading)."""
+    return jax.tree.map(lambda _: fleet_pspec(), tree)
+
+
+def fleet_sharding(mesh: Mesh) -> NamedSharding:
+    """The NamedSharding host arrays are ``device_put`` with before a
+    sharded dispatch — placing inputs pre-sharded is what makes
+    ``donate_argnums`` donation real (no reshard copy to un-donated
+    buffers)."""
+    return NamedSharding(mesh, fleet_pspec())
+
+
+def fleet_batch_size(tree) -> int:
+    """Leading-axis extent shared by every leaf of a stacked batch."""
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        raise ValueError("empty pytree has no batch axis")
+    return int(np.asarray(leaves[0]).shape[0])
+
+
+def pad_fleet(tree, n_shards: int, n_pad: int | None = None):
+    """Pad every leaf's leading batch axis up to a multiple of
+    ``n_shards`` by repeating element 0.
+
+    Returns ``(padded_tree, n_pad)``.  Pad elements are discarded by
+    :func:`unpad_fleet` after the dispatch; callers that carry per-
+    element *decision* masks must pad those with ``False`` themselves so
+    phantom elements never decide (see ``FusedLoop.run``).
+    """
+    b = fleet_batch_size(tree)
+    if n_pad is None:
+        n_pad = (-b) % int(n_shards)
+    if n_pad == 0:
+        return tree, 0
+
+    def one(a):
+        a = np.asarray(a)
+        return np.concatenate([a, np.repeat(a[:1], n_pad, axis=0)])
+    return jax.tree.map(one, tree), n_pad
+
+
+def unpad_fleet(tree, n_pad: int):
+    """Strip :func:`pad_fleet`'s phantom trailing elements again."""
+    if n_pad == 0:
+        return tree
+    return jax.tree.map(lambda a: np.asarray(a)[:-n_pad], tree)
 
 
 def cache_pspecs(cfg, cache, mesh: Mesh, shard_seq: bool = False) -> dict:

@@ -5,7 +5,8 @@
                                  [--model PREFIX] [--out reports/lab]
     python -m repro.lab campaign [--smoke] [--out models/lab]
     python -m repro.lab continual [--smoke] [--scenario failing_ost]
-    python -m repro.lab fuzz [--smoke] [--seed 0] [--out reports/fuzz]
+    python -m repro.lab fuzz [--smoke] [--seed 0] [--mesh N]
+                             [--out reports/fuzz]
 
 ``evaluate`` runs every registered scenario (or the named subset) under
 every static θ plus DIAL and writes ``report.json`` / ``report.md``;
@@ -35,6 +36,15 @@ def _cmd_list(args) -> None:
               f"[{tags}]  {spec.description}")
 
 
+def _make_mesh(n):
+    """``--mesh`` value -> fleet mesh (None off, 0 = all local devices)."""
+    if n is None:
+        return None
+    from repro.distributed.sharding import fleet_mesh
+
+    return fleet_mesh(n or None)
+
+
 def _cmd_evaluate(args) -> None:
     from repro.core.model import DIALModel
     from repro.lab.evaluate import default_model, evaluate, write_report
@@ -45,7 +55,8 @@ def _cmd_evaluate(args) -> None:
     report = evaluate(names=args.scenarios or None, model=model,
                       seconds=seconds, interval=args.interval,
                       seg_backend=args.seg_backend,
-                      fused=not args.no_fused)
+                      fused=not args.no_fused,
+                      mesh=_make_mesh(args.mesh))
     jpath, mpath = write_report(report, args.out)
     s = report["summary"]
     print(f"{s['n_scenarios']} scenarios -> {jpath} / {mpath}")
@@ -121,7 +132,7 @@ def _cmd_fuzz(args) -> None:
     cfg = dataclasses.replace(cfg, **over)
     model = (DIALModel.load(args.model) if args.model
              else default_model(smoke=args.smoke, root=args.models_root))
-    report = run_sweep(cfg, model)
+    report = run_sweep(cfg, model, mesh=_make_mesh(args.mesh))
     jpath, mpath = write_fuzz_report(report, args.out)
     s = report["summary"]
     print(f"{s['n_scenarios']} scenarios, {s['n_buckets']} buckets -> "
@@ -154,6 +165,9 @@ def main(argv=None) -> None:
     ev.add_argument("--no-fused", action="store_true",
                     help="use the per-interval host loop instead of the "
                          "single-dispatch device-resident loop")
+    ev.add_argument("--mesh", type=int, default=None, nargs="?", const=0,
+                    help="shard each policy batch over N local devices "
+                         "(0 or bare flag: all; needs the fused path)")
     ev.add_argument("--out", default="reports/lab")
     ev.add_argument("--smoke", action="store_true",
                     help="CI-sized run (3 s per scenario, smoke model)")
@@ -198,6 +212,14 @@ def main(argv=None) -> None:
                     help="DIALModel prefix (default: evaluate's model "
                          "resolution order)")
     fz.add_argument("--models-root", default="models/lab")
+    fz.add_argument("--mesh", type=int, default=None, nargs="?", const=0,
+                    help="spread each structure bucket over N local "
+                         "devices via the sharded fused path (0 or bare "
+                         "flag: all local devices); cuts sweep "
+                         "wall-clock on multi-device hosts — force CPU "
+                         "devices with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N")
     fz.add_argument("--out", default="reports/fuzz")
     fz.add_argument("--smoke", action="store_true",
                     help="CI-sized sweep (64 scenarios, 3 s, 6 static "

@@ -246,7 +246,7 @@ def run_batch(batch: ScenarioBatch, model=None, seconds: float = 10.0,
               interval: float = 0.5, seg_backend: str = "jax",
               tuner_params: TunerParams | None = None,
               tune_cols=None, engine: BatchEngine | None = None,
-              fused: bool = False):
+              fused: bool = False, mesh=None):
     """Drive a whole batch for ``seconds``, optionally DIAL-tuning.
 
     The batched counterpart of :func:`repro.core.fleet.run_fleet`: every
@@ -263,6 +263,11 @@ def run_batch(batch: ScenarioBatch, model=None, seconds: float = 10.0,
     the host path (tests/test_loop_fused.py); the return value is a
     :class:`~repro.pfs.loop_jax.FusedLoopResult`, whose ``decisions``
     list matches the host agent's interval-aligned records.
+
+    ``mesh`` (fused only) shards the batch axis across a 1-D device mesh
+    (:func:`repro.distributed.sharding.fleet_mesh`): each device runs
+    its slice of the batch device-local, no collectives — decisions
+    identical to the single-device dispatch (tests/test_shard.py).
     """
     steps = max(int(round(interval / batch.params.tick)), 1)
     n_intervals = int(round(seconds / interval))
@@ -277,7 +282,11 @@ def run_batch(batch: ScenarioBatch, model=None, seconds: float = 10.0,
                              "whole-run programs (pass seg_backend "
                              "instead)")
         return _run_batch_fused(batch, model, steps, n_intervals,
-                                tuner_params, seg_backend, tune_cols)
+                                tuner_params, seg_backend, tune_cols,
+                                mesh=mesh)
+    if mesh is not None:
+        raise ValueError("mesh sharding rides the fused batch path — "
+                         "pass fused=True with mesh")
 
     engine = engine or BatchEngine(batch.params, batch.topo, steps,
                                    seg_backend=seg_backend)
@@ -308,7 +317,7 @@ _FUSED_LOOPS: dict = {}
 
 
 def _cached_loop(params, topo, steps, model, tuner_params, seg_backend,
-                 tuned: bool):
+                 tuned: bool, mesh=None):
     from repro.pfs.loop_jax import FusedLoop
 
     key = (None if model is None else id(model),
@@ -318,7 +327,8 @@ def _cached_loop(params, topo, steps, model, tuner_params, seg_backend,
            # OST maps); the compiled program bakes the wiring in
            np.asarray(topo.osc_client).tobytes(),
            np.asarray(topo.osc_ost).tobytes(),
-           int(steps), tuner_params, seg_backend, tuned)
+           int(steps), tuner_params, seg_backend, tuned,
+           mesh)   # jax Mesh hashes by (devices, axis_names)
     if key not in _FUSED_LOOPS:
         if len(_FUSED_LOOPS) >= 32:          # bound the cache: evict the
             _FUSED_LOOPS.pop(next(iter(_FUSED_LOOPS)))   # oldest (FIFO)
@@ -328,13 +338,14 @@ def _cached_loop(params, topo, steps, model, tuner_params, seg_backend,
         # never alias someone else's forests to this compiled program
         _FUSED_LOOPS[key] = (FusedLoop(
             params, topo, steps, model, tuner_params=tuner_params,
-            seg_backend=seg_backend, batched=True, tuned=tuned), model)
+            seg_backend=seg_backend, batched=True, tuned=tuned,
+            mesh=mesh), model)
     return _FUSED_LOOPS[key][0]
 
 
 def _run_batch_fused(batch: ScenarioBatch, model, steps: int,
                      n_intervals: int, tuner_params, seg_backend: str,
-                     tune_cols):
+                     tune_cols, mesh=None):
     """One (or two) jitted dispatches for the whole batched run.
 
     Elements with at least one tuned interface go through the
@@ -360,7 +371,7 @@ def _run_batch_fused(batch: ScenarioBatch, model, steps: int,
                                           tree)
 
     loop_t = _cached_loop(batch.params, batch.topo, steps, model,
-                          tuner_params, seg_backend, tuned=True)
+                          tuner_params, seg_backend, tuned=True, mesh=mesh)
     if len(u_idx) == 0:
         result = loop_t.run(batch.table, batch.state, batch.wstate,
                             n_intervals, schedule=sched, tune_mask=mask)
@@ -371,7 +382,7 @@ def _run_batch_fused(batch: ScenarioBatch, model, steps: int,
                        take(batch.wstate, t_idx), n_intervals,
                        schedule=take(sched, t_idx), tune_mask=mask[t_idx])
     loop_u = _cached_loop(batch.params, batch.topo, steps, None,
-                          tuner_params, seg_backend, tuned=False)
+                          tuner_params, seg_backend, tuned=False, mesh=mesh)
     res_u = loop_u.run(take(batch.table, u_idx), take(batch.state, u_idx),
                        take(batch.wstate, u_idx), n_intervals,
                        schedule=take(sched, u_idx))

@@ -58,14 +58,15 @@ def evaluate_scenario(spec: ScenarioSpec, model: DIALModel,
                       seconds: float = 10.0, interval: float = 0.5,
                       seg_backend: str = "jax",
                       tuner_params: TunerParams | None = None,
-                      fused: bool = True) -> ScenarioResult:
+                      fused: bool = True, mesh=None) -> ScenarioResult:
     """One scenario under every static θ plus DIAL, in one batch.
 
     ``fused=True`` (default) runs the whole comparison through the
     device-resident loop — every interval of engine + tuning in a single
     jitted dispatch per scenario (knob trajectories identical to the
     host loop; see tests/test_loop_fused.py).  ``fused=False`` keeps the
-    per-interval host loop.
+    per-interval host loop.  ``mesh`` shards the |Θ|+1 policy arms
+    across local devices (fused only).
     """
     configs = SPACE.configs()
     m = len(configs)
@@ -79,7 +80,7 @@ def evaluate_scenario(spec: ScenarioSpec, model: DIALModel,
     fleet = run_batch(batch, model=model, seconds=seconds,
                       interval=interval, seg_backend=seg_backend,
                       tuner_params=tuner_params, tune_cols=dial_cols,
-                      fused=fused)
+                      fused=fused, mesh=mesh)
 
     tput = batch.throughput(seconds)["total_mbs"]
     static = tput[:m]
@@ -109,7 +110,8 @@ def evaluate_scenario(spec: ScenarioSpec, model: DIALModel,
 
 def evaluate(names=None, model: DIALModel | None = None,
              seconds: float = 10.0, interval: float = 0.5,
-             seg_backend: str = "jax", fused: bool = True) -> dict:
+             seg_backend: str = "jax", fused: bool = True,
+             mesh=None) -> dict:
     """Run the catalog (default: every registered scenario) and return
     the report dict (rows + summary)."""
     if model is None:
@@ -119,7 +121,8 @@ def evaluate(names=None, model: DIALModel | None = None,
     for name in names:
         res = evaluate_scenario(get_scenario(name), model,
                                 seconds=seconds, interval=interval,
-                                seg_backend=seg_backend, fused=fused)
+                                seg_backend=seg_backend, fused=fused,
+                                mesh=mesh)
         rows.append(res.row())
     speedups = [r["dial_vs_default"] for r in rows]
     fracs = [r["dial_frac_of_best_static"] for r in rows]

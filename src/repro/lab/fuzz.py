@@ -275,7 +275,8 @@ def fingerprint(spec: ScenarioSpec) -> str:
 # ---------------------------------------------------------------------- #
 # the sweep
 # ---------------------------------------------------------------------- #
-def _run_bucket(specs_ix, thetas, model, cfg: FuzzConfig) -> list[dict]:
+def _run_bucket(specs_ix, thetas, model, cfg: FuzzConfig,
+                mesh=None) -> list[dict]:
     """Race every scenario of one structural bucket: static arms + DIAL.
 
     ``specs_ix`` is ``[(index, spec), ...]``; buckets beyond
@@ -302,7 +303,7 @@ def _run_bucket(specs_ix, thetas, model, cfg: FuzzConfig) -> list[dict]:
         result = run_batch(batch, model=model, seconds=cfg.seconds,
                            interval=cfg.interval,
                            seg_backend=cfg.seg_backend,
-                           tune_cols=dial_cols, fused=True)
+                           tune_cols=dial_cols, fused=True, mesh=mesh)
         tput = batch.throughput(cfg.seconds)["total_mbs"]
         changes = np.zeros(len(chunk), dtype=int)
         for r in result.decisions:
@@ -331,10 +332,18 @@ def _run_bucket(specs_ix, thetas, model, cfg: FuzzConfig) -> list[dict]:
     return rows
 
 
-def run_sweep(cfg: FuzzConfig, model) -> dict:
+def run_sweep(cfg: FuzzConfig, model, mesh=None) -> dict:
     """Generate, bucket, race, triage.  Deterministic from ``cfg.seed``
     and the model; the returned report dict serializes byte-identically
-    across invocations."""
+    across invocations.
+
+    ``mesh`` spreads each structural bucket's batch across local devices
+    through the sharded fused path (``--mesh`` on the CLI).  Kept out of
+    the serialized config on purpose: it is an execution knob, and a
+    report must stay byte-comparable with its single-device twin.  Note
+    the PR-6 caveat still applies across *mesh shapes*: a ~1e-12
+    segment-sum reduction drift can flip knife-edge generated scenarios,
+    so only byte-compare reports produced with the same mesh."""
     specs = generate_specs(cfg)
     thetas = [tuple(int(x) for x in t)
               for t in (cfg.thetas or SPACE.configs())]
@@ -347,7 +356,8 @@ def run_sweep(cfg: FuzzConfig, model) -> dict:
     rows = []
     # params (key[0]) is shared; order buckets by the numeric signature
     for key in sorted(buckets, key=lambda k: tuple(k[1:])):
-        rows.extend(_run_bucket(buckets[key], thetas, model, cfg))
+        rows.extend(_run_bucket(buckets[key], thetas, model, cfg,
+                                mesh=mesh))
     rows.sort(key=lambda r: r["index"])
 
     losses, seen = [], set()

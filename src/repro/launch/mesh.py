@@ -23,3 +23,17 @@ def make_test_mesh(n_data: int = 2, n_model: int = 4, *, multi_pod: bool = False
     if multi_pod:
         return jax.make_mesh((2, n_data, n_model), ("pod", "data", "model"))
     return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_fleet_mesh(n_devices: int | None = None):
+    """1-D mesh over the DIAL fleet (scenario-batch) axis.
+
+    Thin launch-side alias of
+    :func:`repro.distributed.sharding.fleet_mesh`: all local devices by
+    default, the first ``n_devices`` otherwise.  On CPU, force visible
+    devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    before jax initializes (see the module docstring).
+    """
+    from repro.distributed.sharding import fleet_mesh
+
+    return fleet_mesh(n_devices)

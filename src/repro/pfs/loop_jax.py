@@ -34,6 +34,17 @@ Equivalence: the loop is pinned against the (bug-fixed)
 trajectories (θ exact) and probe counters (≤1e-6 relative, observed
 ~1e-15) over multi-interval mixed-workload scenarios on both engine
 backends (tests/test_loop_fused.py).
+
+Scale-out: ``mesh=`` shards the batch axis of a ``batched=True`` loop
+over a 1-D device mesh with ``shard_map`` (axis
+:data:`repro.distributed.sharding.FLEET_AXIS`).  Because every DIAL
+decision reads only its own interface's local counters, the per-shard
+programs are fully independent — no collectives anywhere in the scanned
+body — so the sharded program is the vmapped program split across
+devices, and θ trajectories stay *exactly* equal to the single-device
+run (tests/test_shard.py).  ``SimState``/``WorkloadState`` buffers are
+donated into the dispatch (``donate_argnums``) so a fleet's state is
+held once, not twice, at peak.
 """
 
 from __future__ import annotations
@@ -46,8 +57,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.experimental import enable_x64
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.core.config_space import SPACE, ConfigSpace
+from repro.distributed.sharding import pad_fleet, unpad_fleet
 from repro.core.metrics import (N_READ, N_WRITE, READ_KNOB_IDX,
                                 WRITE_KNOB_IDX, snapshot_arrays)
 from repro.core.model import DIALModel
@@ -208,7 +222,12 @@ class FusedLoop:
     shapes reuse the compiled program.  ``batched=True`` vmaps the whole
     loop over a leading batch axis on table/state/wstate/schedule/mask
     (the scenario-lab fan-out); the forests and tuner constants are
-    closed over unbatched.
+    closed over unbatched.  ``mesh=`` additionally shards that batch
+    axis across a 1-D device mesh — the forests stay closed-over
+    (replicated to every device by jit), each shard runs its slice of
+    the fleet with zero cross-device communication, and :meth:`run`
+    pads a non-divisible batch with masked phantom elements it strips
+    from every output.
 
     Decentralization is untouched: every interface's decision still
     reads only that interface's local counters — the fusion is an
@@ -224,7 +243,8 @@ class FusedLoop:
                  warmup_intervals: int = 2,
                  seg_backend: str = "auto",
                  batched: bool = False,
-                 tuned: bool = True):
+                 tuned: bool = True,
+                 mesh: Mesh | None = None):
         self.params = params
         self.topo = topo
         self.steps = int(steps_per_interval)
@@ -235,6 +255,15 @@ class FusedLoop:
         self.min_volume = float(min_volume_bytes)
         self.warmup = int(warmup_intervals)
         self.batched = bool(batched)
+        self.mesh = mesh
+        if mesh is not None and not self.batched:
+            raise ValueError("mesh sharding needs batched=True — the "
+                             "fleet axis being sharded *is* the batch "
+                             "axis")
+        if mesh is not None and len(mesh.axis_names) != 1:
+            raise ValueError(f"FusedLoop shards one batch axis; got a "
+                             f"{len(mesh.axis_names)}-D mesh "
+                             f"{mesh.axis_names} (want fleet_mesh())")
         # tuned=False compiles the lean engine-only run (no decision
         # graph at all) — used for the untuned elements of a split batch,
         # where paying featurize/forest/Algorithm-1 per element would
@@ -375,7 +404,23 @@ class FusedLoop:
             return state, wstate, trace, hist
 
         fn = run if self.tuned else run_untuned
-        self._run = jax.jit(jax.vmap(fn) if self.batched else fn)
+        if self.batched:
+            fn = jax.vmap(fn)
+        if self.mesh is not None:
+            # one spec per argument pytree, prefix-broadcast to every
+            # leaf: the leading batch axis shards, everything trailing
+            # (interfaces, workload rows, ticks) stays device-local.
+            # The scanned body has no collectives, so each shard is an
+            # independent fleet slice — the paper's decentralization,
+            # literal in the partitioning.
+            spec = PartitionSpec(self.mesh.axis_names[0])
+            n_args = 5 if self.tuned else 4
+            fn = shard_map(fn, mesh=self.mesh,
+                           in_specs=(spec,) * n_args, out_specs=spec)
+        # donate state + wstate: the engine consumes its own previous
+        # state, so at fleet scale keeping the input alive across the
+        # dispatch would double peak device memory for no reader
+        self._run = jax.jit(fn, donate_argnums=(1, 2))
 
     # ------------------------------------------------------------------ #
     def neutral_schedule(self, n_intervals: int) -> Disturbance:
@@ -406,6 +451,11 @@ class FusedLoop:
         ``(B, total_ticks, ...)`` stack) — compiled **once** by the
         caller, not rebuilt per interval.  ``tune_mask`` restricts which
         interfaces may decide (default: all).  Numpy in, numpy out.
+
+        With ``mesh=``, a batch that does not divide the device count is
+        padded with copies of element 0 whose ``tune_mask`` is forced
+        ``False`` (phantom elements never decide); every output is
+        sliced back to the caller's batch before returning.
         """
         n_intervals = int(n_intervals)
         if schedule is None:
@@ -416,16 +466,35 @@ class FusedLoop:
                     lambda a: np.broadcast_to(a, (b,) + a.shape), schedule)
         sched = self._shape_schedule(schedule, n_intervals)
         args = (table, state, wstate, sched)
+        n_pad = 0
+        if self.mesh is not None:
+            args, n_pad = pad_fleet(args, self.mesh.devices.size)
         if self.tuned:
             if tune_mask is None:
                 shape = ((np.asarray(state.window_pages).shape[:1]
                           + (self.topo.n_osc,)) if self.batched
                          else (self.topo.n_osc,))
                 tune_mask = np.ones(shape, dtype=bool)
-            args = args + (np.asarray(tune_mask, dtype=bool),)
+            tune_mask = np.asarray(tune_mask, dtype=bool)
+            if n_pad:
+                tune_mask = np.concatenate(
+                    [tune_mask,
+                     np.zeros((n_pad,) + tune_mask.shape[1:], dtype=bool)])
+            args = args + (tune_mask,)
 
         with enable_x64():
-            jargs = jax.tree.map(jnp.asarray, args)
+            if self.mesh is not None:
+                # place inputs *pre-sharded*: jit then donates the
+                # caller's buffers directly instead of donating a
+                # resharding copy (which would leave the originals
+                # alive and defeat donate_argnums)
+                sharding = NamedSharding(
+                    self.mesh, PartitionSpec(self.mesh.axis_names[0]))
+                jargs = jax.tree.map(
+                    lambda a: jax.device_put(np.asarray(a), sharding),
+                    args)
+            else:
+                jargs = jax.tree.map(jnp.asarray, args)
             out = self._run(*jargs)
             out = jax.tree.map(
                 lambda x: x.block_until_ready()
@@ -443,6 +512,11 @@ class FusedLoop:
                  if jtrace is not None else None)
         hist = (jax.tree.map(np.array, jhist)
                 if jhist is not None else None)
+        if n_pad:
+            state = unpad_fleet(state, n_pad)
+            wstate = unpad_fleet(wstate, n_pad)
+            trace = unpad_fleet(trace, n_pad) if trace is not None else None
+            hist = unpad_fleet(hist, n_pad) if hist is not None else None
         return FusedLoopResult(
             state=state, wstate=wstate, trace=trace,
             decisions=(decisions_from_trace(trace)
