@@ -1,6 +1,6 @@
 PY ?= python
 
-.PHONY: verify deps bench-fleet bench-train bench-loop bench-weak bench-json lab-smoke continual-smoke fuzz-smoke
+.PHONY: verify deps bench-fleet bench-train bench-loop bench-weak bench-json bench-compare trace-smoke lab-smoke continual-smoke fuzz-smoke
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -26,6 +26,20 @@ bench-weak:
 # (repo root on PYTHONPATH: run.py imports its siblings as benchmarks.*)
 bench-json:
 	PYTHONPATH=src:. $(PY) benchmarks/run.py --json reports/BENCH_latest.json
+
+# regression gate: latest sweep vs the committed reference record
+# (BASELINE/CANDIDATE overridable: make bench-compare CANDIDATE=...)
+BASELINE ?= BENCH_8.json
+CANDIDATE ?= reports/BENCH_latest.json
+bench-compare:
+	$(PY) benchmarks/compare.py $(BASELINE) $(CANDIDATE)
+
+# CI-sized traced replay: one scenario through the traced fused loop,
+# all three sinks into reports/trace/ (resolves models/dial or the
+# latest campaign artifact; trains a smoke campaign if neither exists)
+trace-smoke:
+	PYTHONPATH=src $(PY) -m repro.lab trace vpic_checkpoint --smoke \
+	    --seconds 5
 
 # CI-sized scenario-catalog sweep (writes reports/lab/report.{json,md})
 lab-smoke:

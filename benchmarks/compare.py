@@ -1,0 +1,139 @@
+"""Regression gate over two ``dial-bench-v1`` perf records.
+
+    python benchmarks/compare.py BASELINE.json CANDIDATE.json
+        [--threshold 0.10] [--report-only]
+
+Diffs every shared metric, classifies each by a direction heuristic
+(``speedup`` up is good, ``*_ms`` down is good, ...), and exits
+nonzero when any metric moved the wrong way by more than the
+threshold — the teeth behind ``make bench-compare``.  Benchmarks that
+exist on only one side are reported but never fail the gate (new
+benchmarks land all the time; removed ones are a review question, not
+a perf regression).  ``--report-only`` prints the same table but
+always exits 0 (CI uses it where the runner's wall clock is too noisy
+to block on).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# metric-name fragments -> which direction is an improvement.  Checked
+# in order; first hit wins.  Names matching neither are informational.
+_INFORMATIONAL = ("us_per_call",)   # harness wall incl. compile: noisy
+_HIGHER_IS_BETTER = ("speedup", "per_s", "frac", "mfu", "gain", "tps",
+                     "ips", "devices", "interfaces", "cores")
+_LOWER_IS_BETTER = ("overhead", "_ms", "_s", "_pct", "seconds")
+
+
+def direction(metric: str) -> int:
+    """+1 higher is better, -1 lower is better, 0 informational."""
+    low = metric.lower()
+    for frag in _INFORMATIONAL:
+        if frag in low:
+            return 0
+    for frag in _HIGHER_IS_BETTER:
+        if frag in low:
+            return +1
+    for frag in _LOWER_IS_BETTER:
+        if frag in low:
+            return -1
+    return 0
+
+
+def _metrics(payload: dict) -> dict:
+    """Flatten a dial-bench-v1 payload to ``{bench.metric: value}``
+    (numeric derived values plus each benchmark's ``us_per_call``)."""
+    if payload.get("schema") != "dial-bench-v1":
+        raise ValueError(f"not a dial-bench-v1 record: "
+                         f"schema={payload.get('schema')!r}")
+    out = {}
+    for rec in payload.get("benchmarks", []):
+        name = rec["name"]
+        out[f"{name}.us_per_call"] = rec.get("us_per_call")
+        for k, v in rec.get("derived", {}).items():
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                out[f"{name}.{k}"] = v
+    return out
+
+
+def compare(baseline: dict, candidate: dict,
+            threshold: float = 0.10) -> dict:
+    """Diff two payloads; returns rows plus the regression verdict.
+
+    A row regresses when the candidate moved against its metric's
+    direction by more than ``threshold`` (relative).  Zero-valued
+    baselines can't express a relative move and are reported as
+    informational.
+    """
+    base, cand = _metrics(baseline), _metrics(candidate)
+    rows, regressions = [], []
+    for key in sorted(set(base) & set(cand)):
+        b, c = base[key], cand[key]
+        d = direction(key.split(".", 1)[1])
+        if b == 0 or d == 0:
+            rows.append({"metric": key, "baseline": b, "candidate": c,
+                         "delta_pct": None, "verdict": "info"})
+            continue
+        delta = (c - b) / abs(b)
+        improved = delta * d
+        verdict = ("regression" if improved < -threshold
+                   else "improved" if improved > threshold else "ok")
+        row = {"metric": key, "baseline": b, "candidate": c,
+               "delta_pct": round(100.0 * delta, 1), "verdict": verdict}
+        rows.append(row)
+        if verdict == "regression":
+            regressions.append(row)
+    only_base = sorted(set(base) - set(cand))
+    only_cand = sorted(set(cand) - set(base))
+    return {"rows": rows, "regressions": regressions,
+            "only_baseline": only_base, "only_candidate": only_cand,
+            "threshold": threshold}
+
+
+def render(result: dict) -> str:
+    lines = [f"{'metric':<48} {'baseline':>12} {'candidate':>12} "
+             f"{'delta':>8}  verdict"]
+    for r in result["rows"]:
+        delta = ("" if r["delta_pct"] is None
+                 else f"{r['delta_pct']:+.1f}%")
+        lines.append(f"{r['metric']:<48} {r['baseline']:>12} "
+                     f"{r['candidate']:>12} {delta:>8}  {r['verdict']}")
+    if result["only_candidate"]:
+        lines.append(f"new (candidate only): "
+                     f"{', '.join(result['only_candidate'])}")
+    if result["only_baseline"]:
+        lines.append(f"dropped (baseline only): "
+                     f"{', '.join(result['only_baseline'])}")
+    n = len(result["regressions"])
+    lines.append(f"{n} regression(s) beyond "
+                 f"{100 * result['threshold']:.0f}%")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="dial-bench-v1 JSON (reference)")
+    ap.add_argument("candidate", help="dial-bench-v1 JSON (under test)")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="relative move against a metric's direction "
+                         "that counts as a regression (default 0.10)")
+    ap.add_argument("--report-only", action="store_true",
+                    help="print the diff but always exit 0")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.candidate) as f:
+        candidate = json.load(f)
+    result = compare(baseline, candidate, threshold=args.threshold)
+    print(render(result))
+    if result["regressions"] and not args.report_only:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,6 +13,7 @@ import os
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
+import argparse     # noqa: E402
 import dataclasses  # noqa: E402
 import json         # noqa: E402
 
@@ -45,19 +46,51 @@ def measure(arch, shape, override=None, window_cache=False, tag=""):
     return rec
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="one optimization pair (A baseline vs padded EP) "
+                         "instead of the full three-cell sweep")
+    ap.add_argument("--json", action="store_true",
+                    help="print a final machine-readable summary line "
+                         "(for benchmarks/run.py)")
+    args = ap.parse_args(argv)
+
+    recs = {}
     # A: expert padding
-    measure("qwen2-moe-a2.7b", "train_4k", tag="A_baseline")
-    measure("qwen2-moe-a2.7b", "train_4k", override={"n_experts_pad": 64},
-            tag="A_padded_ep")
-    # B: head padding
-    measure("llava-next-34b", "train_4k", tag="B_baseline")
-    measure("llava-next-34b", "train_4k", override={"n_heads_pad": 64},
-            tag="B_padded_heads")
-    # C: window cache (code change is live; compare against the analytic
-    # full-cache memory term recorded by the v2 sweep baseline)
-    measure("gemma2-2b", "long_500k", window_cache=True, tag="C_window_cache")
-    measure("gemma2-2b", "decode_32k", window_cache=True, tag="C_window_cache_32k")
+    recs["A_baseline"] = measure("qwen2-moe-a2.7b", "train_4k",
+                                 tag="A_baseline")
+    recs["A_padded_ep"] = measure("qwen2-moe-a2.7b", "train_4k",
+                                  override={"n_experts_pad": 64},
+                                  tag="A_padded_ep")
+    if not args.quick:
+        # B: head padding
+        recs["B_baseline"] = measure("llava-next-34b", "train_4k",
+                                     tag="B_baseline")
+        recs["B_padded_heads"] = measure("llava-next-34b", "train_4k",
+                                         override={"n_heads_pad": 64},
+                                         tag="B_padded_heads")
+        # C: window cache (code change is live; compare against the
+        # analytic full-cache memory term recorded by the v2 sweep
+        # baseline)
+        recs["C_window_cache"] = measure("gemma2-2b", "long_500k",
+                                         window_cache=True,
+                                         tag="C_window_cache")
+        recs["C_window_cache_32k"] = measure("gemma2-2b", "decode_32k",
+                                             window_cache=True,
+                                             tag="C_window_cache_32k")
+    if args.json:
+        summary = {
+            "schema": "dial-perf-iterations-v1",
+            "quick": args.quick,
+            "measures": {tag: {k: rec["roofline"][k]
+                               for k in ("dominant", "compute_s",
+                                         "memory_s", "collective_s",
+                                         "mfu_bound")}
+                         for tag, rec in recs.items()},
+        }
+        print(json.dumps(summary))
+    return recs
 
 
 if __name__ == "__main__":

@@ -34,6 +34,7 @@ def main(argv=None) -> None:
     import benchmarks.fleet_scaling as fleet
     import benchmarks.lab_scaling as labsc
     import benchmarks.loop_scaling as loopsc
+    import benchmarks.obs_overhead as obsov
     import benchmarks.sim_scaling as simsc
     import benchmarks.table2_h5bench as t2
     import benchmarks.table3_overhead as t3
@@ -62,6 +63,28 @@ def main(argv=None) -> None:
     _record(records, "table3_overhead", el,
             {"read_e2e_ms": round(res["read"]["end_to_end_ms"], 2),
              "write_e2e_ms": round(res["write"]["end_to_end_ms"], 2)})
+
+    for sharded, tag in ((False, "table3_fused"), (True, "table3_sharded")):
+        t0 = time.time()
+        rfu = t3.run_fused(sharded=sharded, seconds=10.0)
+        el = (time.time() - t0) * 1e6
+        _record(records, tag, el,
+                {"tuning_ms_per_if_interval":
+                     rfu["tuning_ms_per_interface_interval"],
+                 "tuned_execute_s": rfu["tuned"]["execute_s"],
+                 "tuned_compile_s": rfu["tuned"]["compile_s"],
+                 "engine_only_execute_s": rfu["engine_only"]["execute_s"]})
+
+    t0 = time.time()
+    ro = obsov.bench(seconds=10.0)
+    el = (time.time() - t0) * 1e6
+    _record(records, "obs_overhead", el,
+            {"stride": ro["stride"],
+             "untraced_execute_ms":
+                 round(ro["untraced"]["execute_s"] * 1e3, 1),
+             "decisions_only_overhead_pct":
+                 ro["decisions_only"]["overhead_pct"],
+             "default_overhead_pct": ro["default"]["overhead_pct"]})
 
     t0 = time.time()
     fm = fleet.get_model("numpy")
@@ -129,14 +152,34 @@ def main(argv=None) -> None:
              "max_fleet_interfaces": probe["interfaces"],
              "max_fleet_seconds": probe["seconds"]})
 
+    # same fresh-process constraint: perf_iterations forces 512 host
+    # devices at import
+    t0 = time.time()
+    out = subprocess.run(
+        [sys.executable,
+         os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "perf_iterations.py"), "--quick", "--json"],
+        capture_output=True, text=True, check=True)
+    el = time.time() - t0
+    pi = json.loads(out.stdout.strip().splitlines()[-1])
+    base = pi["measures"]["A_baseline"]
+    pad = pi["measures"]["A_padded_ep"]
+    _record(records, "perf_iterations", el * 1e6,
+            {"a_baseline_dominant": base["dominant"],
+             "a_baseline_mfu_bound": round(base["mfu_bound"], 3),
+             "a_padded_ep_mfu_bound": round(pad["mfu_bound"], 3),
+             "a_mfu_gain": round(pad["mfu_bound"]
+                                 / max(base["mfu_bound"], 1e-9), 2)})
+
     if args.json:
-        import os
+        from repro.obs.timers import collect_provenance
 
         payload = {
             "schema": "dial-bench-v1",
             "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
             "platform": platform.platform(),
             "python": platform.python_version(),
+            "provenance": collect_provenance(),
             "benchmarks": records,
         }
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)

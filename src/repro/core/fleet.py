@@ -169,12 +169,14 @@ class FleetAgent:
         min_volume_bytes: float = 256 * 1024,
         warmup_intervals: int = 2,
         measure_overhead: bool = False,
+        tracer=None,
     ):
         from repro.core.agent import AgentTimings  # avoid import cycle
 
         self.port = port
         self.model = model
         self.space = space
+        self.tracer = tracer  # repro.obs.host.HostTracer | None
         self.tuner_params = (tuner_params if tuner_params is not None
                              else TunerParams())
         self.k = k
@@ -219,13 +221,18 @@ class FleetAgent:
         self._current = np.stack(
             [cur.window_pages, cur.rpcs_in_flight], axis=1).astype(np.int64)
         t1 = time.perf_counter()
-        if len(self._hist) < self.k + 1 or self._ticks <= self.warmup + self.k:
-            return self._gated()
-
-        # per-interface gating, all as masks (same predicates as the loop)
         vol_r, vol_w = snap.read_volume, snap.write_volume
         ops = np.where(vol_r >= vol_w, READ, WRITE)       # op model (SIII-C)
         active = np.maximum(vol_r, vol_w) >= self.min_volume
+        if len(self._hist) < self.k + 1 or self._ticks <= self.warmup + self.k:
+            if self.tracer is not None:
+                self._trace_gated(cur.t, ops, vol_r, vol_w, active,
+                                  warm=False,
+                                  steady=np.zeros(self.n, dtype=bool),
+                                  ratio=np.zeros(self.n))
+            return self._gated()
+
+        # per-interface gating, all as masks (same predicates as the loop)
         oldest = self._hist[0]
         v0 = np.where(ops == READ, oldest.read_volume, oldest.write_volume)
         v1 = np.where(ops == READ, vol_r, vol_w)
@@ -233,6 +240,9 @@ class FleetAgent:
         steady = (ratio >= 0.5) & (ratio <= 2.0)          # burst guard
         rows = np.nonzero(active & steady)[0]
         if rows.size == 0:
+            if self.tracer is not None:
+                self._trace_gated(cur.t, ops, vol_r, vol_w, active,
+                                  warm=True, steady=steady, ratio=ratio)
             return self._gated()
 
         # one feature matrix per op group, one fused model launch
@@ -252,6 +262,8 @@ class FleetAgent:
         t2 = time.perf_counter()
 
         # batched Algorithm 1, then one fancy-indexed knob application
+        cur_theta = (self._current.copy() if self.tracer is not None
+                     else None)
         dec = conditional_score_greedy_batch(
             probs, ops[rows], self._current[rows], self.space,
             self.tuner_params)
@@ -261,6 +273,9 @@ class FleetAgent:
                                      dec.theta[ch, 0], dec.theta[ch, 1])
             self._current[rows[ch]] = dec.theta[ch]
         t3 = time.perf_counter()
+        if self.tracer is not None:
+            self._trace_decided(cur.t, rows, dec, ops, vol_r, vol_w,
+                                active, steady, ratio, cur_theta)
 
         result = FleetTickResult(oscs=self.oscs[rows], ops=ops[rows],
                                  decisions=dec)
@@ -287,6 +302,40 @@ class FleetAgent:
                 tm.snapshot_ms.append(snap_ms)
                 tm.inference_ms.append(inf_ms)
                 tm.end_to_end_ms.append(e2e_ms)
+
+    # ------------------------------------------------------------------ #
+    def _trace_gated(self, t, ops, vol_r, vol_w, active, warm, steady,
+                     ratio) -> None:
+        """Mirror a no-decision interval into the tracer (raw values;
+        the shared normalization applies the masking convention)."""
+        zb = np.zeros(self.n, dtype=bool)
+        cur = self._current.copy()
+        self.tracer.record_interval(
+            t, zb, ops, cur, zb, np.zeros(self.n, dtype=np.int64),
+            np.zeros(self.n), np.zeros((self.n, len(self.space))),
+            vol_r, vol_w, active, steady, warm, ratio, cur)
+
+    def _trace_decided(self, t, rows, dec, ops, vol_r, vol_w, active,
+                       steady, ratio, cur_theta) -> None:
+        """Mirror a decided interval: scatter the Algorithm 1 outcome
+        back to full-fleet arrays.  ``self._current`` post-update is the
+        Algorithm 1 θ for every decided row (changed rows were written,
+        unchanged rows already matched), so it serves as the dense
+        ``theta`` column directly."""
+        decided = np.zeros(self.n, dtype=bool)
+        decided[rows] = True
+        changed = np.zeros(self.n, dtype=bool)
+        changed[rows] = dec.changed
+        ncand = np.zeros(self.n, dtype=np.int64)
+        ncand[rows] = dec.n_candidates
+        score = np.zeros(self.n)
+        score[rows] = dec.score
+        probs = np.zeros((self.n, len(self.space)))
+        probs[rows] = dec.probs
+        self.tracer.record_interval(
+            t, decided, ops, self._current.copy(), changed, ncand,
+            score, probs, vol_r, vol_w, active, steady, True, ratio,
+            cur_theta)
 
     # ------------------------------------------------------------------ #
     def ingest_fused(self, result) -> None:
@@ -327,7 +376,7 @@ def run_fleet(sim, model: DIALModel, oscs=None, seconds: float = 10.0,
               interval: float = 0.5, measure_overhead: bool = False,
               tuner_params: TunerParams | None = None,
               backend: str = "numpy", seg_backend: str = "auto",
-              mesh=None) -> FleetAgent:
+              mesh=None, trace=None) -> FleetAgent:
     """Drive the simulator with one fleet agent over ``oscs`` (default
     all interfaces) — the batched counterpart of ``run_with_agents``.
 
@@ -359,18 +408,35 @@ def run_fleet(sim, model: DIALModel, oscs=None, seconds: float = 10.0,
     Decisions and knob trajectories are identical on every backend —
     only the execution schedule changes (tests/test_loop_fused.py,
     tests/test_shard.py).
+
+    ``trace`` (a :class:`~repro.obs.schema.TraceConfig`) opts the run
+    into telemetry: the returned agent carries a normalized
+    :class:`~repro.obs.schema.RunTrace` as ``fleet.trace``.  On the
+    fused backends the records accumulate as scan outputs inside the
+    dispatch; on ``"numpy"`` a :class:`~repro.obs.host.HostTracer`
+    mirrors the identical schema (``"jax"`` records decision provenance
+    only — the interval engine exposes no per-tick state to sample).
+    Tracing never perturbs a decision (tests/test_obs.py).
     """
     if mesh is not None and backend != "jax-sharded":
         raise ValueError("mesh only applies to backend='jax-sharded'")
+    tracer = None
+    if trace is not None and backend in ("numpy", "jax"):
+        from repro.obs.host import HostTracer
+        tracer = HostTracer(trace, sim.params, sim.topo)
     fleet = FleetAgent(SimFleetPort(sim, oscs), model,
                        tuner_params=tuner_params,
-                       measure_overhead=measure_overhead)
+                       measure_overhead=measure_overhead, tracer=tracer)
+    fleet.trace = None
     steps_per_interval = max(int(round(interval / sim.params.tick)), 1)
     n_intervals = int(round(seconds / interval))
     if backend == "numpy":
         for _ in range(n_intervals):
-            for _ in range(steps_per_interval):
+            for j in range(steps_per_interval):
                 sim.step()
+                if tracer is not None and \
+                        tracer.wants_sample(j, steps_per_interval):
+                    tracer.sample(sim.state)
             fleet.tick()
     elif backend == "jax":
         from repro.pfs.engine_jax import FusedEngine
@@ -401,7 +467,7 @@ def run_fleet(sim, model: DIALModel, oscs=None, seconds: float = 10.0,
                          space=fleet.space, tuner_params=fleet.tuner_params,
                          k=fleet.k, min_volume_bytes=fleet.min_volume,
                          warmup_intervals=fleet.warmup,
-                         seg_backend=seg_backend)
+                         seg_backend=seg_backend, trace=trace)
         tune_mask = np.zeros(sim.n_osc, dtype=bool)
         tune_mask[fleet.oscs] = True
         result = loop.run(table, sim.state, wstate, n_intervals,
@@ -409,6 +475,8 @@ def run_fleet(sim, model: DIALModel, oscs=None, seconds: float = 10.0,
         sim.state = result.state
         sync_workloads_from_table(sim, result.wstate)
         fleet.ingest_fused(result)
+        if trace is not None:
+            fleet.trace = loop.run_trace(result)
     elif backend == "jax-sharded":
         import jax
 
@@ -429,7 +497,8 @@ def run_fleet(sim, model: DIALModel, oscs=None, seconds: float = 10.0,
                          space=fleet.space, tuner_params=fleet.tuner_params,
                          k=fleet.k, min_volume_bytes=fleet.min_volume,
                          warmup_intervals=fleet.warmup,
-                         seg_backend=seg_backend, batched=True, mesh=mesh)
+                         seg_backend=seg_backend, batched=True, mesh=mesh,
+                         trace=trace)
         # lift to a one-element batch (scalars -> (1,) leaves), run the
         # sharded program, drop the batch axis again
         lift = lambda tree: jax.tree.map(
@@ -450,6 +519,11 @@ def run_fleet(sim, model: DIALModel, oscs=None, seconds: float = 10.0,
         sim.state = result.state
         sync_workloads_from_table(sim, result.wstate)
         fleet.ingest_fused(result)
+        if trace is not None:
+            fleet.trace = loop.run_trace(result)
     else:
         raise ValueError(f"unknown engine backend {backend!r}")
+    if tracer is not None:
+        fleet.trace = tracer.run_trace(fleet.oscs, interval,
+                                       sim.params.tick)
     return fleet

@@ -101,6 +101,23 @@ class FleetDecisions:
             probs=self.probs[i],
             score=float(self.score[i]))
 
+    def provenance(self, oscs, ops) -> list:
+        """JSON-safe per-row Algorithm 1 provenance — the decision plus
+        the evidence behind it (per-config probabilities, how many
+        cleared τ, the winning score), keyed by interface and op model.
+        ``oscs``/``ops`` are the row-aligned arrays the caller batched
+        by (:class:`~repro.core.fleet.FleetTickResult` carries both).
+        """
+        return [{
+            "osc": int(oscs[i]),
+            "op": "read" if int(ops[i]) == READ else "write",
+            "theta": [int(self.theta[i, 0]), int(self.theta[i, 1])],
+            "changed": bool(self.changed[i]),
+            "n_candidates": int(self.n_candidates[i]),
+            "score": float(self.score[i]),
+            "probs": [round(float(p), 9) for p in self.probs[i]],
+        } for i in range(len(self))]
+
 
 def score_greedy_arrays(probs, ops, current, thetas, params: TunerParams,
                         xp=np):

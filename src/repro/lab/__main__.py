@@ -7,6 +7,9 @@
     python -m repro.lab continual [--smoke] [--scenario failing_ost]
     python -m repro.lab fuzz [--smoke] [--seed 0] [--mesh N]
                              [--out reports/fuzz]
+    python -m repro.lab trace <scenario> [--stride 20] [--out reports/trace]
+    python -m repro.lab trace --from-report reports/fuzz/report.json \
+                              --fingerprint <fp>
 
 ``evaluate`` runs every registered scenario (or the named subset) under
 every static θ plus DIAL and writes ``report.json`` / ``report.md``;
@@ -18,6 +21,10 @@ jitted retraining) — and reports the post-failure recovery.
 workload mixes, disturbance/fault compositions), races DIAL against a
 static-θ grid through the fused batch path, and writes an auto-triaged
 ``reports/fuzz/`` of every scenario DIAL loses.
+``trace`` replays one scenario (catalog name, or a triaged fuzz loser
+by fingerprint) through the traced fused loop and writes decision
+provenance + per-OST timelines as JSONL, Chrome ``trace_event``
+(Perfetto-ready), and a markdown digest.
 ``--smoke`` shrinks each to CI size.
 """
 
@@ -225,7 +232,36 @@ def main(argv=None) -> None:
                     help="CI-sized sweep (64 scenarios, 3 s, 6 static "
                          "arms, two topologies)")
 
+    tr = sub.add_parser("trace", help="replay one scenario traced; write "
+                                      "JSONL + Chrome trace + summary")
+    tr.add_argument("scenario", nargs="?", default=None,
+                    help="catalog scenario name (see `list`)")
+    tr.add_argument("--from-report", default=None,
+                    help="fuzz report.json to pull a triaged loser from")
+    tr.add_argument("--fingerprint", default=None,
+                    help="which triaged loss to replay (with "
+                         "--from-report)")
+    tr.add_argument("--stride", type=int, default=20,
+                    help="timeline downsampling: one sample every N "
+                         "engine ticks")
+    tr.add_argument("--no-timeline", action="store_true",
+                    help="decision provenance only (no per-tick records)")
+    tr.add_argument("--seconds", type=float, default=10.0)
+    tr.add_argument("--interval", type=float, default=0.5)
+    tr.add_argument("--seg-backend", default="jax")
+    tr.add_argument("--model", default=None,
+                    help="DIALModel prefix (default: evaluate's model "
+                         "resolution order)")
+    tr.add_argument("--out", default="reports/trace")
+    tr.add_argument("--smoke", action="store_true",
+                    help="allow the smoke-grade campaign model")
+
     args = ap.parse_args(argv)
+    if args.cmd == "trace":
+        from repro.lab.trace import main as trace_main
+
+        trace_main(args)
+        return
     {"list": _cmd_list, "evaluate": _cmd_evaluate,
      "campaign": _cmd_campaign, "continual": _cmd_continual,
      "fuzz": _cmd_fuzz}[args.cmd](args)

@@ -246,7 +246,7 @@ def run_batch(batch: ScenarioBatch, model=None, seconds: float = 10.0,
               interval: float = 0.5, seg_backend: str = "jax",
               tuner_params: TunerParams | None = None,
               tune_cols=None, engine: BatchEngine | None = None,
-              fused: bool = False, mesh=None):
+              fused: bool = False, mesh=None, trace=None):
     """Drive a whole batch for ``seconds``, optionally DIAL-tuning.
 
     The batched counterpart of :func:`repro.core.fleet.run_fleet`: every
@@ -268,6 +268,18 @@ def run_batch(batch: ScenarioBatch, model=None, seconds: float = 10.0,
     (:func:`repro.distributed.sharding.fleet_mesh`): each device runs
     its slice of the batch device-local, no collectives — decisions
     identical to the single-device dispatch (tests/test_shard.py).
+
+    ``trace`` (a :class:`~repro.obs.schema.TraceConfig`) opts the run
+    into telemetry.  Fused runs accumulate the records in-dispatch and
+    return them on ``result.trace`` (normalize with
+    :meth:`~repro.obs.schema.RunTrace.from_fused`); on the split
+    tuned/untuned path the timeline covers every element while decision
+    columns of never-tuned elements carry the inert placeholder record
+    (``decided`` false, applied θ, zeroed gate metrics) — the lean
+    engine-only program has no decision path to observe.  The host path
+    mirrors decision provenance through the fleet agent's
+    :class:`~repro.obs.host.HostTracer` (``fleet.trace``; no timeline —
+    the interval engine exposes no per-tick state).
     """
     steps = max(int(round(interval / batch.params.tick)), 1)
     n_intervals = int(round(seconds / interval))
@@ -283,17 +295,26 @@ def run_batch(batch: ScenarioBatch, model=None, seconds: float = 10.0,
                              "instead)")
         return _run_batch_fused(batch, model, steps, n_intervals,
                                 tuner_params, seg_backend, tune_cols,
-                                mesh=mesh)
+                                mesh=mesh, trace=trace)
     if mesh is not None:
         raise ValueError("mesh sharding rides the fused batch path — "
                          "pass fused=True with mesh")
+    if trace is not None and model is None:
+        raise ValueError("host-path tracing records decision provenance "
+                         "through the fleet agent — untuned host batches "
+                         "have neither (use fused=True for timelines)")
 
     engine = engine or BatchEngine(batch.params, batch.topo, steps,
                                    seg_backend=seg_backend)
     fleet = None
     if model is not None:
+        tracer = None
+        if trace is not None:
+            from repro.obs.host import HostTracer
+            tracer = HostTracer(trace, batch.params, batch.topo)
         fleet = FleetAgent(BatchPort(batch, cols=tune_cols), model,
-                           tuner_params=tuner_params)
+                           tuner_params=tuner_params, tracer=tracer)
+        fleet.trace = None
     # precompile the whole run's disturbance schedule once and slice per
     # interval — make_schedule is a pure function of the absolute tick
     # index, so slicing the full-run arrays is exactly the per-interval
@@ -306,6 +327,9 @@ def run_batch(batch: ScenarioBatch, model=None, seconds: float = 10.0,
             batch.table, batch.state, batch.wstate, sched)
         if fleet is not None:
             fleet.tick()
+    if fleet is not None and fleet.tracer is not None:
+        fleet.trace = fleet.tracer.run_trace(
+            fleet.oscs, interval, batch.params.tick)
     return fleet
 
 
@@ -317,7 +341,7 @@ _FUSED_LOOPS: dict = {}
 
 
 def _cached_loop(params, topo, steps, model, tuner_params, seg_backend,
-                 tuned: bool, mesh=None):
+                 tuned: bool, mesh=None, trace=None):
     from repro.pfs.loop_jax import FusedLoop
 
     key = (None if model is None else id(model),
@@ -328,7 +352,9 @@ def _cached_loop(params, topo, steps, model, tuner_params, seg_backend,
            np.asarray(topo.osc_client).tobytes(),
            np.asarray(topo.osc_ost).tobytes(),
            int(steps), tuner_params, seg_backend, tuned,
-           mesh)   # jax Mesh hashes by (devices, axis_names)
+           mesh,    # jax Mesh hashes by (devices, axis_names)
+           trace)   # TraceConfig is frozen/hashable; traced programs
+    #                 have different outputs and must not alias untraced
     if key not in _FUSED_LOOPS:
         if len(_FUSED_LOOPS) >= 32:          # bound the cache: evict the
             _FUSED_LOOPS.pop(next(iter(_FUSED_LOOPS)))   # oldest (FIFO)
@@ -339,13 +365,13 @@ def _cached_loop(params, topo, steps, model, tuner_params, seg_backend,
         _FUSED_LOOPS[key] = (FusedLoop(
             params, topo, steps, model, tuner_params=tuner_params,
             seg_backend=seg_backend, batched=True, tuned=tuned,
-            mesh=mesh), model)
+            mesh=mesh, trace=trace), model)
     return _FUSED_LOOPS[key][0]
 
 
 def _run_batch_fused(batch: ScenarioBatch, model, steps: int,
                      n_intervals: int, tuner_params, seg_backend: str,
-                     tune_cols, mesh=None):
+                     tune_cols, mesh=None, trace=None):
     """One (or two) jitted dispatches for the whole batched run.
 
     Elements with at least one tuned interface go through the
@@ -371,7 +397,8 @@ def _run_batch_fused(batch: ScenarioBatch, model, steps: int,
                                           tree)
 
     loop_t = _cached_loop(batch.params, batch.topo, steps, model,
-                          tuner_params, seg_backend, tuned=True, mesh=mesh)
+                          tuner_params, seg_backend, tuned=True, mesh=mesh,
+                          trace=trace)
     if len(u_idx) == 0:
         result = loop_t.run(batch.table, batch.state, batch.wstate,
                             n_intervals, schedule=sched, tune_mask=mask)
@@ -382,7 +409,8 @@ def _run_batch_fused(batch: ScenarioBatch, model, steps: int,
                        take(batch.wstate, t_idx), n_intervals,
                        schedule=take(sched, t_idx), tune_mask=mask[t_idx])
     loop_u = _cached_loop(batch.params, batch.topo, steps, None,
-                          tuner_params, seg_backend, tuned=False, mesh=mesh)
+                          tuner_params, seg_backend, tuned=False, mesh=mesh,
+                          trace=trace)
     res_u = loop_u.run(take(batch.table, u_idx), take(batch.state, u_idx),
                        take(batch.wstate, u_idx), n_intervals,
                        schedule=take(sched, u_idx))
@@ -396,12 +424,59 @@ def _run_batch_fused(batch: ScenarioBatch, model, steps: int,
     state = jax.tree.map(merge, res_t.state, res_u.state)
     wstate = jax.tree.map(merge, res_t.wstate, res_u.wstate)
     # decision columns come back indexed within the tuned sub-batch;
-    # remap to the caller's element order (b * n + osc fleet columns).
-    # The raw trace is dropped: its leaves stay indexed by the tuned
-    # sub-batch, which would contradict the remapped decisions on the
-    # same result object.
+    # remap to the caller's element order (b * n + osc fleet columns) —
+    # and merge the trace to the same order so both views agree.
     for r in res_t.decisions:
         r.oscs = t_idx[r.oscs // n] * n + r.oscs % n
+    merged_trace = _merge_split_trace(res_t.trace, res_u.trace, b, t_idx,
+                                      u_idx, state)
     batch.state, batch.wstate = state, wstate
-    return _dc.replace(res_t, state=state, wstate=wstate, trace=None,
-                       hist=None)
+    return _dc.replace(res_t, state=state, wstate=wstate,
+                       trace=merged_trace, hist=None)
+
+
+def _merge_split_trace(tr_t, tr_u, b, t_idx, u_idx, state):
+    """Reassemble the two sub-batches' traces in caller element order.
+
+    The timeline exists on both programs and merges losslessly.
+    Decision columns only exist on the tuned program: never-tuned
+    elements get the inert placeholder record — ``decided`` false
+    everywhere, θ = the element's applied knobs (their knobs never
+    change, so the final state is the whole-run value), warmup flags
+    copied from the tuned sub-batch (pure functions of the interval
+    index), and zeros for the gate metrics the lean program never
+    computes.
+    """
+    # untraced runs still carry the decisions-only ys dict (it feeds
+    # result.decisions); only opt-in traces (marked by "t") merge —
+    # anything else stays dropped, as before, since its leaves index
+    # the tuned sub-batch
+    if tr_t is None or "t" not in tr_t:
+        return None
+
+    def merge(a_t, a_u=None, fill=None):
+        a_t = np.asarray(a_t)
+        out = np.zeros((b,) + a_t.shape[1:], dtype=a_t.dtype)
+        out[t_idx] = a_t
+        if a_u is not None:
+            out[u_idx] = np.asarray(a_u)
+        elif fill is not None:
+            out[u_idx] = fill
+        return out
+
+    theta_u = np.stack([np.asarray(state.window_pages)[u_idx],
+                        np.asarray(state.rpcs_in_flight)[u_idx]],
+                       axis=-1).astype(np.int64)[:, None]   # (B_u,1,n,2)
+    fills = {"t": np.asarray(tr_t["t"])[0],
+             "warm": np.asarray(tr_t["warm"])[0],
+             "theta": theta_u, "cur_theta": theta_u}
+    out = {}
+    for key, v in tr_t.items():
+        if key == "timeline":
+            out[key] = jax.tree.map(lambda at, au: merge(at, a_u=au),
+                                    v, tr_u["timeline"])
+        elif key == "t":
+            out[key] = merge(v, a_u=tr_u["t"])
+        else:
+            out[key] = merge(v, fill=fills.get(key))
+    return out

@@ -58,7 +58,8 @@ def evaluate_scenario(spec: ScenarioSpec, model: DIALModel,
                       seconds: float = 10.0, interval: float = 0.5,
                       seg_backend: str = "jax",
                       tuner_params: TunerParams | None = None,
-                      fused: bool = True, mesh=None) -> ScenarioResult:
+                      fused: bool = True, mesh=None,
+                      trace=None) -> ScenarioResult:
     """One scenario under every static θ plus DIAL, in one batch.
 
     ``fused=True`` (default) runs the whole comparison through the
@@ -67,7 +68,15 @@ def evaluate_scenario(spec: ScenarioSpec, model: DIALModel,
     host loop; see tests/test_loop_fused.py).  ``fused=False`` keeps the
     per-interval host loop.  ``mesh`` shards the |Θ|+1 policy arms
     across local devices (fused only).
+
+    ``trace`` (a :class:`~repro.obs.schema.TraceConfig`, fused only)
+    records the comparison in-dispatch; the returned result then carries
+    a :class:`~repro.obs.schema.RunTrace` as ``result.trace`` — fleet
+    columns ``e * n + osc`` over the |Θ|+1 elements, decision provenance
+    on the DIAL element's columns, timelines for every arm.
     """
+    if trace is not None and not fused:
+        raise ValueError("evaluate tracing rides the fused batch path")
     configs = SPACE.configs()
     m = len(configs)
     built = []
@@ -80,7 +89,11 @@ def evaluate_scenario(spec: ScenarioSpec, model: DIALModel,
     fleet = run_batch(batch, model=model, seconds=seconds,
                       interval=interval, seg_backend=seg_backend,
                       tuner_params=tuner_params, tune_cols=dial_cols,
-                      fused=fused, mesh=mesh)
+                      fused=fused, mesh=mesh, trace=trace)
+    run_trace = None
+    if trace is not None:
+        from repro.obs.schema import RunTrace
+        run_trace = RunTrace.from_fused(fleet, trace, batch.params.tick)
 
     tput = batch.throughput(seconds)["total_mbs"]
     static = tput[:m]
@@ -91,7 +104,7 @@ def evaluate_scenario(spec: ScenarioSpec, model: DIALModel,
                    if theta0 in configs else default_mbs)
     dial_mbs = float(tput[m])
     changes = sum(int(r.decisions.changed.sum()) for r in fleet.decisions)
-    return ScenarioResult(
+    result = ScenarioResult(
         scenario=spec.name,
         tags=spec.tags,
         n_clients=spec.n_clients,
@@ -106,6 +119,8 @@ def evaluate_scenario(spec: ScenarioSpec, model: DIALModel,
         dial_frac_of_best_static=dial_mbs / max(float(static[best]), 1e-9),
         changes=changes,
     )
+    result.trace = run_trace        # plain attribute; row() stays JSON
+    return result
 
 
 def evaluate(names=None, model: DIALModel | None = None,

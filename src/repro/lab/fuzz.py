@@ -433,13 +433,38 @@ def render_markdown(report: dict) -> str:
                 f"{100 * r['dial_frac_of_best_static']:.1f}% | "
                 f"`{r['fingerprint']}` |")
         lines.append("")
+        if report["triage"]["losses"][0].get("trace_recipe"):
+            lines += [
+                "Replay any loser with full decision provenance and "
+                "per-OST timelines:",
+                "",
+                f"    {report['triage']['losses'][0]['trace_recipe']}",
+                "",
+                "(swap the fingerprint for any row above).",
+                "",
+            ]
     return "\n".join(lines)
+
+
+def trace_recipe(report_path: str, fp: str) -> str:
+    """The replay command for one triaged loss: rebuilds the exact spec
+    from the serialized physics in the report and re-runs it traced."""
+    return (f"python -m repro.lab trace --from-report {report_path} "
+            f"--fingerprint {fp}")
 
 
 def write_fuzz_report(report: dict, out_dir: str) -> tuple[str, str]:
     os.makedirs(out_dir, exist_ok=True)
     jpath = os.path.join(out_dir, "report.json")
     mpath = os.path.join(out_dir, "report.md")
+    # stamp each triaged loss with its replay recipe; paths are derived
+    # from out_dir only, so reports stay byte-identical across
+    # invocations into the same directory (the CI determinism check)
+    report = {**report, "triage": {
+        **report["triage"],
+        "losses": [{**r, "trace_recipe": trace_recipe(jpath,
+                                                      r["fingerprint"])}
+                   for r in report["triage"]["losses"]]}}
     with open(jpath, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
         f.write("\n")

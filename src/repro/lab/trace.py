@@ -1,0 +1,104 @@
+"""Traced scenario replay: one command from scenario to Perfetto.
+
+``python -m repro.lab trace <scenario>`` runs one catalog scenario (or
+a triaged fuzz loser, via ``--from-report/--fingerprint``) through the
+device-resident fused loop with telemetry on, then writes the three
+sinks side by side:
+
+    trace.jsonl          lossless ``dial-trace-v1`` records
+    trace.chrome.json    Chrome ``trace_event`` — open in Perfetto or
+                         ``chrome://tracing``
+    trace.md             human-readable digest (gate outcomes, θ
+                         changes, per-OST throughput)
+
+The records accumulate as scan outputs *inside* the jitted dispatch —
+tracing a run never changes what the run decides (tests/test_obs.py).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.lab.batch import run_batch, stack_scenarios
+from repro.lab.scenarios import ScenarioSpec, build, get_scenario
+from repro.obs.schema import RunTrace, TraceConfig
+
+
+def load_spec_from_report(path: str, fp: str) -> ScenarioSpec:
+    """Rebuild one triaged loss from a fuzz ``report.json`` by its
+    fingerprint — the replay half of the report's ``trace_recipe``."""
+    from repro.lab.fuzz import spec_from_dict
+
+    with open(path) as f:
+        report = json.load(f)
+    losses = report.get("triage", {}).get("losses", [])
+    for r in losses:
+        if r["fingerprint"] == fp:
+            return spec_from_dict(r["spec"], name=r["name"])
+    have = ", ".join(r["fingerprint"] for r in losses) or "none"
+    raise KeyError(f"fingerprint {fp!r} not in {path} (triaged: {have})")
+
+
+def trace_scenario(spec: ScenarioSpec, model, seconds: float = 10.0,
+                   interval: float = 0.5, config: TraceConfig | None = None,
+                   seg_backend: str = "jax") -> RunTrace:
+    """Run ``spec`` DIAL-tuned through the traced fused loop and return
+    the normalized :class:`RunTrace` (fleet columns = the scenario's
+    interfaces, one OST track each)."""
+    config = config if config is not None else TraceConfig()
+    batch = stack_scenarios([build(spec)])
+    result = run_batch(batch, model=model, seconds=seconds,
+                       interval=interval, seg_backend=seg_backend,
+                       fused=True, trace=config)
+    trace = RunTrace.from_fused(result, config, batch.params.tick)
+    trace.validate()
+    return trace
+
+
+def write_trace(trace: RunTrace, out_dir: str,
+                title: str = "trace") -> dict:
+    """All three sinks into ``out_dir``; returns their paths."""
+    from repro.obs.sinks import render_summary, write_chrome, write_jsonl
+
+    os.makedirs(out_dir, exist_ok=True)
+    paths = {
+        "jsonl": write_jsonl(trace, os.path.join(out_dir, "trace.jsonl")),
+        "chrome": write_chrome(trace,
+                               os.path.join(out_dir, "trace.chrome.json")),
+        "md": os.path.join(out_dir, "trace.md"),
+    }
+    with open(paths["md"], "w") as f:
+        f.write(render_summary(trace, title=title))
+    return paths
+
+
+def main(args) -> int:
+    """CLI entry (dispatched from ``repro.lab.__main__``)."""
+    from repro.lab.evaluate import default_model
+    from repro.obs.sinks import render_summary
+    from repro.core.model import DIALModel
+
+    if args.from_report:
+        if not args.fingerprint:
+            raise SystemExit("--from-report needs --fingerprint "
+                             "(see the report's trace_recipe fields)")
+        spec = load_spec_from_report(args.from_report, args.fingerprint)
+    elif args.scenario:
+        spec = get_scenario(args.scenario)
+    else:
+        raise SystemExit("pass a scenario name or --from-report/"
+                         "--fingerprint")
+
+    model = (DIALModel.load(args.model) if args.model
+             else default_model(smoke=args.smoke))
+    cfg = TraceConfig(stride=args.stride,
+                      timeline=not args.no_timeline)
+    trace = trace_scenario(spec, model, seconds=args.seconds,
+                           interval=args.interval, config=cfg,
+                           seg_backend=args.seg_backend)
+    paths = write_trace(trace, args.out, title=spec.name)
+    print(render_summary(trace, title=spec.name))
+    print(f"wrote {paths['jsonl']}, {paths['chrome']} "
+          f"(open in Perfetto), {paths['md']}")
+    return 0

@@ -1,0 +1,26 @@
+"""Device-resident telemetry for the DIAL reproduction.
+
+Opt-in tracing threaded through both execution paths — decision
+provenance and per-OST timelines accumulated as scan outputs inside the
+fused loop (no host callbacks), mirrored record-for-record by the host
+agent path — plus host-side sinks (JSONL, Chrome ``trace_event``,
+markdown), phase timers, and bench provenance.  See
+``docs/OBSERVABILITY.md``.
+"""
+
+from repro.obs.host import HostTracer
+from repro.obs.schema import (DECISION_FIELDS, TIMELINE_FIELDS,
+                              TRACE_SCHEMA, RunTrace, TraceConfig,
+                              timeline_tap)
+from repro.obs.sinks import (chrome_trace, read_jsonl, render_summary,
+                             write_chrome, write_jsonl)
+from repro.obs.timers import (PhaseTimers, collect_provenance,
+                              compile_execute_split)
+
+__all__ = [
+    "TRACE_SCHEMA", "DECISION_FIELDS", "TIMELINE_FIELDS",
+    "TraceConfig", "RunTrace", "timeline_tap", "HostTracer",
+    "write_jsonl", "read_jsonl", "chrome_trace", "write_chrome",
+    "render_summary",
+    "PhaseTimers", "compile_execute_split", "collect_provenance",
+]

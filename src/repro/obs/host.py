@@ -1,0 +1,93 @@
+"""Host-path tracer: the fused trace schema, emitted by the host loop.
+
+:class:`HostTracer` collects the identical records the traced
+:class:`~repro.pfs.loop_jax.FusedLoop` emits as scan outputs —
+per-interval decision provenance from :class:`~repro.core.fleet.FleetAgent`
+(which calls :meth:`record_interval` every tick, gated or not) and
+per-tick timeline samples from the ``run_fleet`` numpy loop (which
+calls :meth:`sample` at the fused path's exact sample offsets).  The
+result is a :class:`~repro.obs.schema.RunTrace` diffable row-for-row
+against a traced fused run of the same scenario
+(tests/test_obs.py).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.obs.schema import RunTrace, TraceConfig, normalize_decisions, \
+    timeline_tap
+
+
+class HostTracer:
+    """Accumulates host-loop records; one instance per traced run."""
+
+    def __init__(self, config: TraceConfig | None = None,
+                 params=None, topo=None):
+        self.config = config if config is not None else TraceConfig()
+        self.params = params
+        self.topo = topo
+        self._dec: list[dict] = []
+        self._tl: list[dict] = []
+
+    # ------------------------------------------------------------------ #
+    # decision mirror (called by FleetAgent.tick, every interval)
+    # ------------------------------------------------------------------ #
+    def record_interval(self, t, decided, ops, theta, changed,
+                        n_candidates, score, probs, vol_r, vol_w, active,
+                        steady, warm, ratio, cur_theta) -> None:
+        """One interval's full-fleet record (pre-masking raw values —
+        the same masking as the fused path applies in normalization)."""
+        self._dec.append({
+            "t": float(t), "decided": np.asarray(decided, dtype=bool),
+            "ops": np.asarray(ops), "theta": np.asarray(theta),
+            "changed": np.asarray(changed),
+            "n_candidates": np.asarray(n_candidates),
+            "score": np.asarray(score), "probs": np.asarray(probs),
+            "vol_r": np.asarray(vol_r), "vol_w": np.asarray(vol_w),
+            "active": np.asarray(active), "steady": np.asarray(steady),
+            "warm": bool(warm), "ratio": np.asarray(ratio),
+            "cur_theta": np.asarray(cur_theta)})
+
+    def wants_sample(self, tick_in_interval: int,
+                     steps_per_interval: int) -> bool:
+        """Sample offsets matching the fused chunked scan: within each
+        interval, ticks ``stride-1, 2*stride-1, ...`` (remainder ticks
+        past the last full stride are not sampled)."""
+        if not self.config.timeline:
+            return False
+        s = self.config.stride
+        n_chunks = steps_per_interval // s
+        return (tick_in_interval + 1) % s == 0 and \
+            tick_in_interval < n_chunks * s
+
+    def sample(self, state, dist=None) -> None:
+        """One timeline sample off the live (numpy) ``SimState``."""
+        self._tl.append(timeline_tap(self.params, self.topo, state,
+                                     dist, xp=np))
+
+    # ------------------------------------------------------------------ #
+    def run_trace(self, oscs, interval_seconds: float,
+                  tick_seconds: float) -> RunTrace:
+        """Normalize everything recorded so far to a :class:`RunTrace`."""
+        if not self._dec:
+            raise ValueError("no intervals recorded")
+        stack = lambda k: np.stack([d[k] for d in self._dec])
+        decisions = normalize_decisions(
+            np.asarray([d["t"] for d in self._dec]),
+            stack("decided"), stack("ops"), stack("theta"),
+            stack("changed"), stack("n_candidates"), stack("score"),
+            stack("probs"), stack("vol_r"), stack("vol_w"),
+            stack("active"), stack("steady"),
+            np.asarray([d["warm"] for d in self._dec]),
+            stack("ratio"), stack("cur_theta"))
+        timeline = None
+        if self._tl:
+            timeline = {k: np.stack([np.asarray(s[k]) for s in self._tl])
+                        for k in self._tl[0]}
+            timeline["t"] = timeline["t"].astype(np.float64)
+        return RunTrace(decisions=decisions, timeline=timeline,
+                        oscs=np.asarray(oscs, dtype=np.int64),
+                        config=self.config,
+                        interval_seconds=float(interval_seconds),
+                        tick_seconds=float(tick_seconds))

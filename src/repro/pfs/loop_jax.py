@@ -62,6 +62,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.core.config_space import SPACE, ConfigSpace
 from repro.distributed.sharding import pad_fleet, unpad_fleet
+from repro.obs.schema import TraceConfig, timeline_tap
+from repro.obs.timers import PhaseTimers
 from repro.core.metrics import (N_READ, N_WRITE, READ_KNOB_IDX,
                                 WRITE_KNOB_IDX, snapshot_arrays)
 from repro.core.model import DIALModel
@@ -244,7 +246,8 @@ class FusedLoop:
                  seg_backend: str = "auto",
                  batched: bool = False,
                  tuned: bool = True,
-                 mesh: Mesh | None = None):
+                 mesh: Mesh | None = None,
+                 trace: TraceConfig | None = None):
         self.params = params
         self.topo = topo
         self.steps = int(steps_per_interval)
@@ -256,6 +259,12 @@ class FusedLoop:
         self.warmup = int(warmup_intervals)
         self.batched = bool(batched)
         self.mesh = mesh
+        # opt-in telemetry: None compiles the exact untraced graph (the
+        # branch below is taken at trace time, so an untraced loop pays
+        # literally nothing); a TraceConfig adds scan *outputs* only —
+        # the decision arithmetic is shared, never forked
+        self.trace_config = trace
+        self.timers = PhaseTimers()
         if mesh is not None and not self.batched:
             raise ValueError("mesh sharding needs batched=True — the "
                              "fleet axis being sharded *is* the batch "
@@ -314,14 +323,9 @@ class FusedLoop:
             # its float32 matrix (same rounding, same bits)
             return x64.astype(jnp.float32).reshape(n * m, -1)
 
-        def run_untuned(table, state, wstate, sched):
-            def interval(carry, dist):
-                carry, _ = jax.lax.scan(tick_body(table), carry, dist,
-                                        length=self.steps)
-                return carry, None
-            (state, wstate), _ = jax.lax.scan(
-                interval, (state, wstate), sched)
-            return state, wstate
+        tcfg = self.trace_config
+        tap_timeline = tcfg is not None and tcfg.timeline \
+            and self.steps >= tcfg.stride
 
         def tick_body(table):
             def body(carry, dist):
@@ -333,6 +337,60 @@ class FusedLoop:
                 return (st, ws), None
             return body
 
+        def run_ticks(table, state, wstate, dist):
+            """One interval of engine ticks -> (state, wstate, taps).
+
+            Untraced: the original single scan over ``steps`` ticks —
+            byte-identical graph.  Traced with timeline: the same tick
+            body scanned in ``stride``-tick chunks, one
+            :func:`timeline_tap` per chunk boundary as scan output (so
+            the tap compute is paid once per ``stride`` ticks, not per
+            tick, and vmap/shard_map stack it like any other ys).
+            """
+            body = tick_body(table)
+            if not tap_timeline:
+                (state, wstate), _ = jax.lax.scan(
+                    body, (state, wstate), dist, length=self.steps)
+                return state, wstate, None
+            stride = tcfg.stride
+            n_chunks = self.steps // stride
+
+            def chunk(carry, dch):
+                carry, _ = jax.lax.scan(body, carry, dch, length=stride)
+                st, _ = carry
+                tap = timeline_tap(pfsp, pfst, st,
+                                   jax.tree.map(lambda a: a[-1], dch),
+                                   xp=jnp, segsum=segsum)
+                return carry, tap
+
+            dmain = jax.tree.map(
+                lambda a: a[:n_chunks * stride].reshape(
+                    (n_chunks, stride) + a.shape[1:]), dist)
+            (state, wstate), taps = jax.lax.scan(
+                chunk, (state, wstate), dmain, length=n_chunks)
+            rem = self.steps - n_chunks * stride
+            if rem:
+                drem = jax.tree.map(lambda a: a[n_chunks * stride:], dist)
+                (state, wstate), _ = jax.lax.scan(
+                    body, (state, wstate), drem, length=rem)
+            return state, wstate, taps
+
+        def run_untuned(table, state, wstate, sched):
+            def interval(carry, dist):
+                st, ws = carry
+                st, ws, taps = run_ticks(table, st, ws, dist)
+                if tcfg is None:
+                    return (st, ws), None
+                ys = {"t": st.now}
+                if taps is not None:
+                    ys["timeline"] = taps
+                return (st, ws), ys
+            (state, wstate), trace = jax.lax.scan(
+                interval, (state, wstate), sched)
+            if tcfg is None:
+                return state, wstate
+            return state, wstate, trace
+
         def run(table, state, wstate, sched, tune_mask):
             hist0 = (jnp.zeros((kp1, n, N_READ)),
                      jnp.zeros((kp1, n, N_WRITE)),
@@ -340,9 +398,7 @@ class FusedLoop:
 
             def interval(carry, dist):
                 state, wstate, prev, hist, tick = carry
-                (state, wstate), _ = jax.lax.scan(
-                    tick_body(table), (state, wstate), dist,
-                    length=self.steps)
+                state, wstate, taps = run_ticks(table, state, wstate, dist)
 
                 # probe + snapshot: the oracle arithmetic, on device
                 cur = probe_state(state)
@@ -395,6 +451,16 @@ class FusedLoop:
                 ys = {"decided": decide, "ops": ops, "theta": theta,
                       "changed": changed, "n_candidates": n_cand,
                       "score": score, "probs": probs}
+                if tcfg is not None:
+                    # provenance extras: every value already exists in
+                    # the decision graph — tracing adds outputs, never
+                    # arithmetic (bit-neutrality, tests/test_obs.py)
+                    ys.update({"t": state.now, "vol_r": vol_r,
+                               "vol_w": vol_w, "active": active,
+                               "steady": steady, "warm": warm,
+                               "ratio": ratio, "cur_theta": cur_theta})
+                    if taps is not None:
+                        ys["timeline"] = taps
                 return (state, wstate, cur, hist, tick), ys
 
             carry0 = (state, wstate, probe_state(state), hist0,
@@ -421,6 +487,15 @@ class FusedLoop:
         # state, so at fleet scale keeping the input alive across the
         # dispatch would double peak device memory for no reader
         self._run = jax.jit(fn, donate_argnums=(1, 2))
+
+    # ------------------------------------------------------------------ #
+    def run_trace(self, result: "FusedLoopResult"):
+        """Normalize a traced result to a :class:`~repro.obs.schema.RunTrace`."""
+        from repro.obs.schema import RunTrace
+        if self.trace_config is None:
+            raise ValueError("loop was built without trace=TraceConfig(...)")
+        return RunTrace.from_fused(result, self.trace_config,
+                                   self.params.tick)
 
     # ------------------------------------------------------------------ #
     def neutral_schedule(self, n_intervals: int) -> Disturbance:
@@ -490,28 +565,34 @@ class FusedLoop:
                 # alive and defeat donate_argnums)
                 sharding = NamedSharding(
                     self.mesh, PartitionSpec(self.mesh.axis_names[0]))
-                jargs = jax.tree.map(
-                    lambda a: jax.device_put(np.asarray(a), sharding),
-                    args)
+                with self.timers.phase("device_put"):
+                    jargs = jax.tree.map(
+                        lambda a: jax.device_put(np.asarray(a), sharding),
+                        args)
             else:
-                jargs = jax.tree.map(jnp.asarray, args)
-            out = self._run(*jargs)
-            out = jax.tree.map(
-                lambda x: x.block_until_ready()
-                if hasattr(x, "block_until_ready") else x, out)
+                with self.timers.phase("device_put"):
+                    jargs = jax.tree.map(jnp.asarray, args)
+            with self.timers.phase("dispatch"):
+                out = self._run(*jargs)
+                out = jax.tree.map(
+                    lambda x: x.block_until_ready()
+                    if hasattr(x, "block_until_ready") else x, out)
         if self.tuned:
             jstate, jws, jtrace, jhist = out
+        elif self.trace_config is not None:
+            (jstate, jws, jtrace), jhist = out, None
         else:
             (jstate, jws), jtrace, jhist = out, None, None
-        state = jax.tree.map(np.array, jstate)
-        if not self.batched:
-            state.now = float(state.now)
-            state.tick_index = int(state.tick_index)
-        wstate = jax.tree.map(np.array, jws)
-        trace = (jax.tree.map(np.array, jtrace)
-                 if jtrace is not None else None)
-        hist = (jax.tree.map(np.array, jhist)
-                if jhist is not None else None)
+        with self.timers.phase("to_host"):
+            state = jax.tree.map(np.array, jstate)
+            if not self.batched:
+                state.now = float(state.now)
+                state.tick_index = int(state.tick_index)
+            wstate = jax.tree.map(np.array, jws)
+            trace = (jax.tree.map(np.array, jtrace)
+                     if jtrace is not None else None)
+            hist = (jax.tree.map(np.array, jhist)
+                    if jhist is not None else None)
         if n_pad:
             state = unpad_fleet(state, n_pad)
             wstate = unpad_fleet(wstate, n_pad)
@@ -520,7 +601,8 @@ class FusedLoop:
         return FusedLoopResult(
             state=state, wstate=wstate, trace=trace,
             decisions=(decisions_from_trace(trace)
-                       if trace is not None else []),
+                       if trace is not None and "decided" in trace
+                       else []),
             hist=hist,
             interval_seconds=self.steps * self.params.tick,
             n_run=n_intervals)
