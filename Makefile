@@ -1,6 +1,6 @@
 PY ?= python
 
-.PHONY: verify deps bench-fleet bench-train bench-loop bench-weak bench-json bench-compare trace-smoke lab-smoke continual-smoke fuzz-smoke
+.PHONY: verify deps bench-fleet bench-train bench-loop bench-weak bench-json bench-compare trace-smoke lab-smoke continual-smoke fuzz-smoke diagnose-smoke
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -50,6 +50,13 @@ continual-smoke:
 	PYTHONPATH=src $(PY) -m repro.lab continual --smoke
 
 # CI-sized fuzz sweep: 64 generated scenarios raced vs a static grid,
-# auto-triaged (writes reports/fuzz/report.{json,md})
+# auto-triaged (writes reports/fuzz/report.{json,md}); every triaged
+# loser is stamped with its counterfactual diagnosis
 fuzz-smoke:
 	PYTHONPATH=src $(PY) -m repro.lab fuzz --smoke
+
+# CI-sized counterfactual diagnosis: one registry scenario replayed
+# under the intervention arms end to end (writes reports/diagnose/)
+diagnose-smoke:
+	PYTHONPATH=src $(PY) -m repro.lab diagnose degraded_ost --smoke \
+	    --seconds 5 --out reports/diagnose

@@ -66,11 +66,23 @@ def compare(baseline: dict, candidate: dict,
     A row regresses when the candidate moved against its metric's
     direction by more than ``threshold`` (relative).  Zero-valued
     baselines can't express a relative move and are reported as
-    informational.
+    informational.  Metrics present on only one side get first-class
+    rows with verdict ``new`` (candidate only) or ``removed``
+    (baseline only) — visible in the table, never a gate failure.
     """
     base, cand = _metrics(baseline), _metrics(candidate)
     rows, regressions = [], []
-    for key in sorted(set(base) & set(cand)):
+    for key in sorted(set(base) | set(cand)):
+        if key not in cand:
+            rows.append({"metric": key, "baseline": base[key],
+                         "candidate": None, "delta_pct": None,
+                         "verdict": "removed"})
+            continue
+        if key not in base:
+            rows.append({"metric": key, "baseline": None,
+                         "candidate": cand[key], "delta_pct": None,
+                         "verdict": "new"})
+            continue
         b, c = base[key], cand[key]
         d = direction(key.split(".", 1)[1])
         if b == 0 or d == 0:
@@ -99,8 +111,10 @@ def render(result: dict) -> str:
     for r in result["rows"]:
         delta = ("" if r["delta_pct"] is None
                  else f"{r['delta_pct']:+.1f}%")
-        lines.append(f"{r['metric']:<48} {r['baseline']:>12} "
-                     f"{r['candidate']:>12} {delta:>8}  {r['verdict']}")
+        b = "—" if r["baseline"] is None else r["baseline"]
+        c = "—" if r["candidate"] is None else r["candidate"]
+        lines.append(f"{r['metric']:<48} {b:>12} "
+                     f"{c:>12} {delta:>8}  {r['verdict']}")
     if result["only_candidate"]:
         lines.append(f"new (candidate only): "
                      f"{', '.join(result['only_candidate'])}")

@@ -10,6 +10,9 @@
     python -m repro.lab trace <scenario> [--stride 20] [--out reports/trace]
     python -m repro.lab trace --from-report reports/fuzz/report.json \
                               --fingerprint <fp>
+    python -m repro.lab diagnose <scenario> [--out reports/diagnose]
+    python -m repro.lab diagnose --from-report reports/fuzz/report.json \
+                                 [--fingerprint <fp> | --all]
 
 ``evaluate`` runs every registered scenario (or the named subset) under
 every static θ plus DIAL and writes ``report.json`` / ``report.md``;
@@ -25,6 +28,11 @@ static-θ grid through the fused batch path, and writes an auto-triaged
 by fingerprint) through the traced fused loop and writes decision
 provenance + per-OST timelines as JSONL, Chrome ``trace_event``
 (Perfetto-ready), and a markdown digest.
+``diagnose`` replays a scenario under the counterfactual intervention
+arms (θ pinned to best-static, gates forced open, decisions frozen)
+and writes a dominant-cause diagnosis with per-interval evidence;
+``fuzz`` runs it automatically over every triaged loser unless
+``--no-diagnose`` is given.
 ``--smoke`` shrinks each to CI size.
 """
 
@@ -100,6 +108,9 @@ def _cmd_continual(args) -> None:
     from repro.lab.continual import run_comparison, write_report
     from repro.learn.online import OnlinePolicy
 
+    if args.hard_from:
+        _cmd_hard_cases(args)
+        return
     model = DIALModel.load(args.model) if args.model else None
     seconds = 10.0 if args.smoke else args.seconds
     gbdt = (GBDTParams(n_trees=20, max_depth=4) if args.smoke
@@ -121,6 +132,43 @@ def _cmd_continual(args) -> None:
           f"{report['post_tail_gain']:.2f}x)")
 
 
+def _cmd_hard_cases(args) -> None:
+    """``continual --hard-from``: the fuzz-triage replay curriculum."""
+    from repro.core.gbdt import GBDTParams
+    from repro.core.model import DIALModel
+    from repro.lab.continual import (run_hard_case_curriculum,
+                                     write_curriculum_report)
+    from repro.lab.evaluate import default_model
+    from repro.learn.online import OnlinePolicy
+
+    model = (DIALModel.load(args.model) if args.model
+             else default_model(smoke=args.smoke))
+    gbdt = (GBDTParams(n_trees=20, max_depth=4) if args.smoke
+            else GBDTParams(n_trees=40, max_depth=5))
+    policy = OnlinePolicy(refit_every=args.refit_every,
+                          min_samples=16 if args.smoke else 32,
+                          cooldown=2 if args.smoke else 4,
+                          explore_eps=args.explore_eps)
+    max_cases = args.max_cases if args.max_cases is not None else (
+        6 if args.smoke else None)
+    report = run_hard_case_curriculum(
+        args.hard_from, model, seconds=6.0 if args.smoke else args.seconds,
+        interval=args.interval, policy=policy, gbdt_params=gbdt,
+        max_cases=max_cases)
+    path = write_curriculum_report(report, args.out)
+    o = report["overall"]
+    print(f"{report['n_losers']} triaged loser(s), "
+          f"{report['n_replays']} curriculum replay(s), "
+          f"{report['n_refits']} refit(s) -> {path}")
+    print(f"loss rate {100 * o['before_loss_rate']:.0f}% -> "
+          f"{100 * o['after_loss_rate']:.0f}% "
+          f"(delta {100 * o['delta']:+.0f}%)")
+    for cause, row in report["buckets"].items():
+        print(f"  {cause}: {row['n']} case(s), loss rate "
+              f"{100 * row['before_loss_rate']:.0f}% -> "
+              f"{100 * row['after_loss_rate']:.0f}%")
+
+
 def _cmd_fuzz(args) -> None:
     import dataclasses
 
@@ -139,15 +187,21 @@ def _cmd_fuzz(args) -> None:
     cfg = dataclasses.replace(cfg, **over)
     model = (DIALModel.load(args.model) if args.model
              else default_model(smoke=args.smoke, root=args.models_root))
-    report = run_sweep(cfg, model, mesh=_make_mesh(args.mesh))
+    report = run_sweep(cfg, model, mesh=_make_mesh(args.mesh),
+                       diagnose=not args.no_diagnose,
+                       max_diagnoses=args.max_diagnoses)
     jpath, mpath = write_fuzz_report(report, args.out)
     s = report["summary"]
     print(f"{s['n_scenarios']} scenarios, {s['n_buckets']} buckets -> "
           f"{jpath} / {mpath}")
+    causes = s.get("loss_causes")
+    by_cause = ("" if causes is None else " [" + (
+        ", ".join(f"{c}: {n}" for c, n in causes.items()) or "no causes")
+        + "]")
     print(f"mean DIAL frac of best static "
           f"{100 * s['mean_dial_frac_of_best_static']:.1f}%, "
           f"{s['n_losses']} loss(es) beyond "
-          f"{100 * cfg.loss_threshold:.0f}%")
+          f"{100 * cfg.loss_threshold:.0f}%" + by_cause)
 
 
 def main(argv=None) -> None:
@@ -205,6 +259,15 @@ def main(argv=None) -> None:
     ct.add_argument("--out", default="reports/lab")
     ct.add_argument("--smoke", action="store_true",
                     help="CI-sized run (10 s, small refits)")
+    ct.add_argument("--hard-from", default=None,
+                    help="fuzz report.json: instead of the frozen-vs-"
+                         "online comparison, replay its triaged losers "
+                         "as a hard-case curriculum (weighted by "
+                         "diagnosed cause) and report the loss-rate "
+                         "delta per cause bucket")
+    ct.add_argument("--max-cases", type=int, default=None,
+                    help="with --hard-from: cap the losers replayed "
+                         "(worst-first; --smoke caps at 6)")
 
     fz = sub.add_parser("fuzz", help="seeded scenario fuzzing: generate, "
                                      "race vs static grid, auto-triage")
@@ -231,6 +294,13 @@ def main(argv=None) -> None:
     fz.add_argument("--smoke", action="store_true",
                     help="CI-sized sweep (64 scenarios, 3 s, 6 static "
                          "arms, two topologies)")
+    fz.add_argument("--no-diagnose", action="store_true",
+                    help="skip stamping a counterfactual diagnosis into "
+                         "each triaged loser")
+    fz.add_argument("--max-diagnoses", type=int, default=None,
+                    help="diagnose at most N losers (worst first; the "
+                         "report records diagnosed-of-total; default: "
+                         "every triaged loser)")
 
     tr = sub.add_parser("trace", help="replay one scenario traced; write "
                                       "JSONL + Chrome trace + summary")
@@ -246,6 +316,10 @@ def main(argv=None) -> None:
                          "engine ticks")
     tr.add_argument("--no-timeline", action="store_true",
                     help="decision provenance only (no per-tick records)")
+    tr.add_argument("--diagnose", action="store_true",
+                    help="also run the counterfactual diagnosis and "
+                         "stamp its verdict into every sink (JSONL "
+                         "record, Perfetto marker track, md section)")
     tr.add_argument("--seconds", type=float, default=10.0)
     tr.add_argument("--interval", type=float, default=0.5)
     tr.add_argument("--seg-backend", default="jax")
@@ -256,11 +330,49 @@ def main(argv=None) -> None:
     tr.add_argument("--smoke", action="store_true",
                     help="allow the smoke-grade campaign model")
 
+    dg = sub.add_parser("diagnose", help="counterfactual replay: "
+                                         "attribute a loss to a cause "
+                                         "with per-interval evidence")
+    dg.add_argument("scenario", nargs="?", default=None,
+                    help="catalog scenario name (see `list`)")
+    dg.add_argument("--from-report", default=None,
+                    help="fuzz report.json to pull triaged loser(s) from")
+    dg.add_argument("--fingerprint", default=None,
+                    help="which triaged loss to diagnose (with "
+                         "--from-report)")
+    dg.add_argument("--all", action="store_true",
+                    help="diagnose every triaged loss of --from-report")
+    dg.add_argument("--seconds", type=float, default=3.0)
+    dg.add_argument("--interval", type=float, default=0.5)
+    dg.add_argument("--threshold", type=float, default=0.05,
+                    help="loss threshold X for the cause cascade")
+    dg.add_argument("--max-evidence", type=int, default=8,
+                    help="evidence rows kept per diagnosis (total is "
+                         "always recorded)")
+    dg.add_argument("--seg-backend", default="jax")
+    dg.add_argument("--model", default=None,
+                    help="DIALModel prefix (default: evaluate's model "
+                         "resolution order)")
+    dg.add_argument("--alt-model", default=None,
+                    help="second DIALModel prefix for the model_swap "
+                         "arm (was the artifact version the loss?)")
+    dg.add_argument("--mesh", type=int, default=None, nargs="?", const=0,
+                    help="run the replay arms through the sharded fused "
+                         "path over N local devices (0 or bare: all)")
+    dg.add_argument("--out", default="reports/diagnose")
+    dg.add_argument("--smoke", action="store_true",
+                    help="allow the smoke-grade campaign model")
+
     args = ap.parse_args(argv)
     if args.cmd == "trace":
         from repro.lab.trace import main as trace_main
 
         trace_main(args)
+        return
+    if args.cmd == "diagnose":
+        from repro.lab.diagnose import main as diagnose_main
+
+        diagnose_main(args)
         return
     {"list": _cmd_list, "evaluate": _cmd_evaluate,
      "campaign": _cmd_campaign, "continual": _cmd_continual,

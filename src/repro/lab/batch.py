@@ -246,7 +246,8 @@ def run_batch(batch: ScenarioBatch, model=None, seconds: float = 10.0,
               interval: float = 0.5, seg_backend: str = "jax",
               tuner_params: TunerParams | None = None,
               tune_cols=None, engine: BatchEngine | None = None,
-              fused: bool = False, mesh=None, trace=None):
+              fused: bool = False, mesh=None, trace=None,
+              intervene=None):
     """Drive a whole batch for ``seconds``, optionally DIAL-tuning.
 
     The batched counterpart of :func:`repro.core.fleet.run_fleet`: every
@@ -280,6 +281,13 @@ def run_batch(batch: ScenarioBatch, model=None, seconds: float = 10.0,
     mirrors decision provenance through the fleet agent's
     :class:`~repro.obs.host.HostTracer` (``fleet.trace``; no timeline —
     the interval engine exposes no per-tick state).
+
+    ``intervene`` (fused only) is a per-interface
+    :class:`~repro.pfs.loop_jax.Intervention` with ``(B, n)`` leading
+    shape — the counterfactual-replay hook used by
+    :mod:`repro.obs.diagnose`.  Rows of never-tuned elements are
+    dropped with the element (the lean program has no decision path to
+    intervene on).
     """
     steps = max(int(round(interval / batch.params.tick)), 1)
     n_intervals = int(round(seconds / interval))
@@ -295,7 +303,11 @@ def run_batch(batch: ScenarioBatch, model=None, seconds: float = 10.0,
                              "instead)")
         return _run_batch_fused(batch, model, steps, n_intervals,
                                 tuner_params, seg_backend, tune_cols,
-                                mesh=mesh, trace=trace)
+                                mesh=mesh, trace=trace,
+                                intervene=intervene)
+    if intervene is not None:
+        raise ValueError("intervene= rides the fused batch path — "
+                         "pass fused=True")
     if mesh is not None:
         raise ValueError("mesh sharding rides the fused batch path — "
                          "pass fused=True with mesh")
@@ -371,7 +383,7 @@ def _cached_loop(params, topo, steps, model, tuner_params, seg_backend,
 
 def _run_batch_fused(batch: ScenarioBatch, model, steps: int,
                      n_intervals: int, tuner_params, seg_backend: str,
-                     tune_cols, mesh=None, trace=None):
+                     tune_cols, mesh=None, trace=None, intervene=None):
     """One (or two) jitted dispatches for the whole batched run.
 
     Elements with at least one tuned interface go through the
@@ -401,13 +413,16 @@ def _run_batch_fused(batch: ScenarioBatch, model, steps: int,
                           trace=trace)
     if len(u_idx) == 0:
         result = loop_t.run(batch.table, batch.state, batch.wstate,
-                            n_intervals, schedule=sched, tune_mask=mask)
+                            n_intervals, schedule=sched, tune_mask=mask,
+                            intervene=intervene)
         batch.state, batch.wstate = result.state, result.wstate
         return result
 
     res_t = loop_t.run(take(batch.table, t_idx), take(batch.state, t_idx),
                        take(batch.wstate, t_idx), n_intervals,
-                       schedule=take(sched, t_idx), tune_mask=mask[t_idx])
+                       schedule=take(sched, t_idx), tune_mask=mask[t_idx],
+                       intervene=(None if intervene is None
+                                  else take(intervene, t_idx)))
     loop_u = _cached_loop(batch.params, batch.topo, steps, None,
                           tuner_params, seg_backend, tuned=False, mesh=mesh,
                           trace=trace)

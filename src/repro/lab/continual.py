@@ -298,3 +298,173 @@ def write_report(report: dict, out_dir: str) -> str:
     with open(path, "w") as f:
         json.dump(report, f, indent=2)
     return path
+
+
+# ---------------------------------------------------------------------- #
+# the hard-case replay curriculum: fuzz triage -> refits -> re-race
+# ---------------------------------------------------------------------- #
+CURRICULUM_SCHEMA = "dial-curriculum-v1"
+
+#: curriculum replays per diagnosed cause.  Model-attributed losses
+#: (the forests ranked wrong, converged late, or cleared no candidate)
+#: are replayed hardest — each replay collects on-policy labels and
+#: feeds the online refits.  Gate-attributed losses get one pass (the
+#: model is not at fault; their diagnosis evidence rows are surfaced as
+#: gate-threshold evidence instead).  ``inherent`` and ``none`` losses
+#: carry no signal a refit could use.
+CAUSE_WEIGHTS = {
+    "model_misranked": 3,
+    "reaction_lag": 2,
+    "candidate_missing": 2,
+    "gate_blocked": 1,
+    "undiagnosed": 1,
+    "inherent": 0,
+    "none": 0,
+}
+
+
+def _race_vs_best(spec: ScenarioSpec, model: DIALModel, best_theta,
+                  seconds: float, interval: float,
+                  seg_backend: str) -> dict:
+    """DIAL vs the loser's recorded best-static θ, under the sweep's
+    own run length — the before/after measurement both ends share."""
+    from repro.obs.diagnose import DiagnoseConfig, race_scenario
+
+    cfg = DiagnoseConfig(seconds=seconds, interval=interval,
+                         thetas=(tuple(int(x) for x in best_theta),),
+                         seg_backend=seg_backend)
+    return race_scenario(spec, model, cfg)
+
+
+def run_hard_case_curriculum(report_path: str, model: DIALModel, *,
+                             seconds: float = 12.0, interval: float = 0.5,
+                             policy: OnlinePolicy | None = None,
+                             gbdt_params: GBDTParams | None = None,
+                             seg_backend: str = "jax",
+                             max_cases: int | None = None,
+                             seed: int = 0) -> dict:
+    """Close the triage loop: replay a fuzz report's losers as a
+    continual-learning curriculum and measure the loss-rate delta.
+
+    Every triaged loser is (1) re-raced against its recorded
+    best-static θ with the incoming model (*before*), (2) replayed
+    ``CAUSE_WEIGHTS[cause]`` times through :func:`run_continual` with
+    online refits mutating ``model`` in place — losers the diagnosis
+    attributes to the *model* are replayed hardest, gate-attributed
+    losers instead contribute their evidence rows to the report's
+    ``gate_evidence`` ledger — then (3) re-raced with the refit model
+    (*after*).  The report buckets before/after loss rates per
+    diagnosed cause.  ``seconds`` / ``interval`` control the curriculum
+    replays; the before/after races reuse the fuzz sweep's own run
+    length so "losing" means exactly what it meant at triage time.
+    """
+    with open(report_path) as f:
+        fuzz_report = json.load(f)
+    from repro.lab.fuzz import spec_from_dict
+
+    losses = fuzz_report["triage"]["losses"]
+    if max_cases is not None:
+        losses = losses[:max_cases]
+    loss_x = float(fuzz_report["triage"]["loss_threshold"])
+    min_mbs = float(fuzz_report["config"].get("min_best_static_mbs", 0.0))
+    race_seconds = float(fuzz_report["config"]["seconds"])
+    race_interval = float(fuzz_report["config"]["interval"])
+    policy = policy if policy is not None else OnlinePolicy(
+        refit_every=4, min_samples=16, cooldown=2, explore_eps=0.15)
+    gbdt_params = gbdt_params or GBDTParams(n_trees=40, max_depth=5)
+
+    def losing(race: dict) -> bool:
+        return (race["best_static_mbs"] >= min_mbs
+                and race["dial_mbs"] < (1.0 - loss_x)
+                * race["best_static_mbs"])
+
+    cases, gate_evidence = [], []
+    for r in losses:
+        spec = spec_from_dict(r["spec"], name=r["name"])
+        cause = r.get("diagnosis", {}).get("cause", "undiagnosed")
+        if cause == "gate_blocked":
+            gate_evidence.append({
+                "name": r["name"], "fingerprint": r["fingerprint"],
+                "evidence": r["diagnosis"]["evidence"],
+                "n_evidence_total": r["diagnosis"]["n_evidence_total"],
+            })
+        cases.append({"spec": spec, "row": r, "cause": cause,
+                      "weight": CAUSE_WEIGHTS.get(cause, 1)})
+
+    # (1) before: every case, with the incoming forests
+    for c in cases:
+        c["before"] = _race_vs_best(c["spec"], model,
+                                    c["row"]["best_static_theta"],
+                                    race_seconds, race_interval,
+                                    seg_backend)
+
+    # (2) the curriculum: weighted replays with in-place online refits
+    n_replays = n_refits = 0
+    for i, c in enumerate(cases):
+        for rep in range(c["weight"]):
+            res = run_continual(c["spec"], model, online=True,
+                                seconds=seconds, interval=interval,
+                                policy=policy, gbdt_params=gbdt_params,
+                                seg_backend=seg_backend,
+                                seed=seed + 1000 * i + rep)
+            n_replays += 1
+            n_refits += len(res.refits)
+
+    # (3) after: the same races, with the curriculum-refit forests
+    for c in cases:
+        c["after"] = _race_vs_best(c["spec"], model,
+                                   c["row"]["best_static_theta"],
+                                   race_seconds, race_interval,
+                                   seg_backend)
+
+    buckets: dict = {}
+    for c in cases:
+        b = buckets.setdefault(c["cause"], {"n": 0, "before_losses": 0,
+                                            "after_losses": 0})
+        b["n"] += 1
+        b["before_losses"] += int(losing(c["before"]))
+        b["after_losses"] += int(losing(c["after"]))
+    for b in buckets.values():
+        b["before_loss_rate"] = b["before_losses"] / b["n"]
+        b["after_loss_rate"] = b["after_losses"] / b["n"]
+        b["delta"] = b["after_loss_rate"] - b["before_loss_rate"]
+    n = len(cases)
+    before = sum(b["before_losses"] for b in buckets.values())
+    after = sum(b["after_losses"] for b in buckets.values())
+
+    return {
+        "schema": CURRICULUM_SCHEMA,
+        "source": os.path.basename(report_path),
+        "n_losers": n,
+        "n_replays": n_replays,
+        "n_refits": n_refits,
+        "replay_seconds": seconds,
+        "replay_interval": interval,
+        "race_seconds": race_seconds,
+        "loss_threshold": loss_x,
+        "cause_weights": dict(sorted(CAUSE_WEIGHTS.items())),
+        "cases": [{
+            "name": c["row"]["name"],
+            "fingerprint": c["row"]["fingerprint"],
+            "cause": c["cause"],
+            "weight": c["weight"],
+            "before": {**c["before"], "losing": losing(c["before"])},
+            "after": {**c["after"], "losing": losing(c["after"])},
+        } for c in cases],
+        "buckets": dict(sorted(buckets.items())),
+        "overall": {
+            "before_loss_rate": before / n if n else 0.0,
+            "after_loss_rate": after / n if n else 0.0,
+            "delta": (after - before) / n if n else 0.0,
+        },
+        "gate_evidence": gate_evidence,
+    }
+
+
+def write_curriculum_report(report: dict, out_dir: str) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "curriculum.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path

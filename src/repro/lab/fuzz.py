@@ -332,7 +332,8 @@ def _run_bucket(specs_ix, thetas, model, cfg: FuzzConfig,
     return rows
 
 
-def run_sweep(cfg: FuzzConfig, model, mesh=None) -> dict:
+def run_sweep(cfg: FuzzConfig, model, mesh=None, diagnose: bool = False,
+              max_diagnoses: int | None = 32) -> dict:
     """Generate, bucket, race, triage.  Deterministic from ``cfg.seed``
     and the model; the returned report dict serializes byte-identically
     across invocations.
@@ -343,7 +344,14 @@ def run_sweep(cfg: FuzzConfig, model, mesh=None) -> dict:
     report must stay byte-comparable with its single-device twin.  Note
     the PR-6 caveat still applies across *mesh shapes*: a ~1e-12
     segment-sum reduction drift can flip knife-edge generated scenarios,
-    so only byte-compare reports produced with the same mesh."""
+    so only byte-compare reports produced with the same mesh.
+
+    ``diagnose=True`` stamps a counterfactual diagnosis
+    (:func:`repro.obs.diagnose.diagnose`) into each triaged loss —
+    dominant cause + evidence rows, reusing the sweep's recorded race
+    figures — worst losers first, at most ``max_diagnoses`` of them
+    (``None`` = all; the summary records diagnosed-of-total and the
+    per-cause loss counts)."""
     specs = generate_specs(cfg)
     thetas = [tuple(int(x) for x in t)
               for t in (cfg.thetas or SPACE.configs())]
@@ -370,6 +378,29 @@ def run_sweep(cfg: FuzzConfig, model, mesh=None) -> dict:
             losses.append({**r, "spec": spec_to_dict(specs[r["index"]])})
     losses.sort(key=lambda r: (r["dial_frac_of_best_static"], r["index"]))
 
+    diag_summary = {}
+    if diagnose:
+        from repro.obs.diagnose import DiagnoseConfig, cause_counts
+        from repro.obs.diagnose import diagnose as _diagnose
+
+        dcfg = DiagnoseConfig.from_fuzz(cfg)
+        n_diag = (len(losses) if max_diagnoses is None
+                  else min(len(losses), int(max_diagnoses)))
+        diags = []
+        for r in losses[:n_diag]:
+            d = _diagnose(specs[r["index"]], model, dcfg,
+                          race={k: r[k] for k in
+                                ("dial_mbs", "best_static_mbs",
+                                 "best_static_theta",
+                                 "dial_frac_of_best_static")},
+                          mesh=mesh)
+            # the loss row already carries name/fingerprint/spec
+            r["diagnosis"] = {k: v for k, v in d.items()
+                              if k not in ("name", "fingerprint")}
+            diags.append(d)
+        diag_summary = {"n_diagnosed": n_diag,
+                        "loss_causes": cause_counts(diags)}
+
     fracs = [r["dial_frac_of_best_static"] for r in rows]
     return {
         "config": {
@@ -386,6 +417,7 @@ def run_sweep(cfg: FuzzConfig, model, mesh=None) -> dict:
             "n_losses": len(losses),
             "mean_dial_frac_of_best_static": float(np.mean(fracs)),
             "min_dial_frac_of_best_static": float(np.min(fracs)),
+            **diag_summary,
         },
         "scenarios": rows,
         "triage": {
@@ -417,21 +449,28 @@ def render_markdown(report: dict) -> str:
         "",
     ]
     if report["triage"]["losses"]:
+        diagnosed = any(r.get("diagnosis")
+                        for r in report["triage"]["losses"])
+        cause_col = " cause |" if diagnosed else ""
         lines += [
             "| scenario | topo | events | θ₀ | DIAL MB/s | "
-            "best static MB/s (θ) | DIAL/best | fingerprint |",
-            "|---|---|---|---|---|---|---|---|",
+            "best static MB/s (θ) | DIAL/best | fingerprint |" + cause_col,
+            "|---|---|---|---|---|---|---|---|" + ("---|" if diagnosed
+                                                   else ""),
         ]
         for r in report["triage"]["losses"]:
             th = "×".join(str(x) for x in r["best_static_theta"])
             t0 = "×".join(str(x) for x in r["initial_theta"])
             ev = ",".join(r["event_kinds"]) or "—"
+            cause = (f" {r['diagnosis']['cause']} |"
+                     if diagnosed and r.get("diagnosis") else
+                     (" — |" if diagnosed else ""))
             lines.append(
                 f"| {r['name']} | {r['n_clients']}c×{r['n_osts']}ost | "
                 f"{ev} | {t0} | {r['dial_mbs']:.1f} | "
                 f"{r['best_static_mbs']:.1f} ({th}) | "
                 f"{100 * r['dial_frac_of_best_static']:.1f}% | "
-                f"`{r['fingerprint']}` |")
+                f"`{r['fingerprint']}` |" + cause)
         lines.append("")
         if report["triage"]["losses"][0].get("trace_recipe"):
             lines += [

@@ -5,7 +5,7 @@ a triaged fuzz loser, via ``--from-report/--fingerprint``) through the
 device-resident fused loop with telemetry on, then writes the three
 sinks side by side:
 
-    trace.jsonl          lossless ``dial-trace-v1`` records
+    trace.jsonl          lossless ``dial-trace-v2`` records
     trace.chrome.json    Chrome ``trace_event`` — open in Perfetto or
                          ``chrome://tracing``
     trace.md             human-readable digest (gate outcomes, θ
@@ -57,19 +57,24 @@ def trace_scenario(spec: ScenarioSpec, model, seconds: float = 10.0,
 
 
 def write_trace(trace: RunTrace, out_dir: str,
-                title: str = "trace") -> dict:
-    """All three sinks into ``out_dir``; returns their paths."""
+                title: str = "trace", diagnosis: dict | None = None) -> dict:
+    """All three sinks into ``out_dir``; returns their paths.  With
+    ``diagnosis`` (a :mod:`repro.obs.diagnose` report), the verdict is
+    stamped into every sink: a ``diagnosis`` JSONL record, a Perfetto
+    marker track with per-evidence-row instants, a markdown section."""
     from repro.obs.sinks import render_summary, write_chrome, write_jsonl
 
     os.makedirs(out_dir, exist_ok=True)
     paths = {
-        "jsonl": write_jsonl(trace, os.path.join(out_dir, "trace.jsonl")),
+        "jsonl": write_jsonl(trace, os.path.join(out_dir, "trace.jsonl"),
+                             diagnosis=diagnosis),
         "chrome": write_chrome(trace,
-                               os.path.join(out_dir, "trace.chrome.json")),
+                               os.path.join(out_dir, "trace.chrome.json"),
+                               diagnosis=diagnosis),
         "md": os.path.join(out_dir, "trace.md"),
     }
     with open(paths["md"], "w") as f:
-        f.write(render_summary(trace, title=title))
+        f.write(render_summary(trace, title=title, diagnosis=diagnosis))
     return paths
 
 
@@ -97,8 +102,16 @@ def main(args) -> int:
     trace = trace_scenario(spec, model, seconds=args.seconds,
                            interval=args.interval, config=cfg,
                            seg_backend=args.seg_backend)
-    paths = write_trace(trace, args.out, title=spec.name)
-    print(render_summary(trace, title=spec.name))
+    diagnosis = None
+    if getattr(args, "diagnose", False):
+        from repro.obs.diagnose import DiagnoseConfig, diagnose
+        dcfg = DiagnoseConfig(seconds=args.seconds,
+                              interval=args.interval,
+                              seg_backend=args.seg_backend)
+        diagnosis = diagnose(spec, model, dcfg)
+    paths = write_trace(trace, args.out, title=spec.name,
+                        diagnosis=diagnosis)
+    print(render_summary(trace, title=spec.name, diagnosis=diagnosis))
     print(f"wrote {paths['jsonl']}, {paths['chrome']} "
           f"(open in Perfetto), {paths['md']}")
     return 0

@@ -8,11 +8,16 @@ markdown), phase timers, and bench provenance.  See
 ``docs/OBSERVABILITY.md``.
 """
 
+from repro.obs.diagnose import (ARMS, CAUSES, DIAGNOSIS_SCHEMA,
+                                DiagnoseConfig, cause_counts, diagnose,
+                                render_diagnosis_markdown,
+                                write_diagnosis_report)
 from repro.obs.host import HostTracer
 from repro.obs.schema import (DECISION_FIELDS, TIMELINE_FIELDS,
                               TRACE_SCHEMA, RunTrace, TraceConfig,
                               timeline_tap)
-from repro.obs.sinks import (chrome_trace, read_jsonl, render_summary,
+from repro.obs.sinks import (chrome_trace, read_jsonl,
+                             read_jsonl_diagnosis, render_summary,
                              write_chrome, write_jsonl)
 from repro.obs.timers import (PhaseTimers, collect_provenance,
                               compile_execute_split)
@@ -20,7 +25,9 @@ from repro.obs.timers import (PhaseTimers, collect_provenance,
 __all__ = [
     "TRACE_SCHEMA", "DECISION_FIELDS", "TIMELINE_FIELDS",
     "TraceConfig", "RunTrace", "timeline_tap", "HostTracer",
-    "write_jsonl", "read_jsonl", "chrome_trace", "write_chrome",
-    "render_summary",
+    "write_jsonl", "read_jsonl", "read_jsonl_diagnosis", "chrome_trace",
+    "write_chrome", "render_summary",
+    "DIAGNOSIS_SCHEMA", "CAUSES", "ARMS", "DiagnoseConfig", "diagnose",
+    "cause_counts", "write_diagnosis_report", "render_diagnosis_markdown",
     "PhaseTimers", "compile_execute_split", "collect_provenance",
 ]

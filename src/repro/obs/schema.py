@@ -6,7 +6,7 @@ the tuner's own rationale — first-class observables with a schema that
 is *identical* across the host loop and the device-resident fused loop,
 so a traced host run and a traced fused run are diffable row for row.
 
-Two record kinds (``dial-trace-v1``):
+Record kinds (``dial-trace-v2``; ``v1`` lacked ``diagnosis``):
 
 ``decision``  one row per (tuning interval, interface): the full
               provenance of that interface's Algorithm 1 pass — chosen
@@ -18,6 +18,10 @@ Two record kinds (``dial-trace-v1``):
               bytes, queued + in-pipeline bytes, active RPCs, remaining
               dirty-cache room of the attached OSCs, and the disturbance
               scales in effect — sampled every ``stride`` ticks.
+``diagnosis`` at most one per file: the counterfactual replay verdict
+              for the traced run (:mod:`repro.obs.diagnose`) — dominant
+              cause, intervention-arm throughputs, and evidence rows
+              keyed to the same intervals as the ``decision`` records.
 
 Masking convention (what makes the two paths diffable): rows that did
 not reach Algorithm 1 (``decided`` false) carry the *applied* θ and
@@ -35,7 +39,9 @@ import dataclasses
 import numpy as np
 
 
-TRACE_SCHEMA = "dial-trace-v1"
+TRACE_SCHEMA = "dial-trace-v2"
+#: schemas read_jsonl accepts (v1 files simply carry no diagnosis record)
+TRACE_SCHEMAS = ("dial-trace-v1", "dial-trace-v2")
 
 #: per-(interval, interface) decision provenance, canonical field order
 DECISION_FIELDS = ("t", "decided", "ops", "theta", "changed",

@@ -16,13 +16,15 @@ import json
 
 import numpy as np
 
-from repro.obs.schema import TRACE_SCHEMA, RunTrace, TraceConfig
+from repro.obs.schema import (TRACE_SCHEMA, TRACE_SCHEMAS, RunTrace,
+                              TraceConfig)
 
 
 # ---------------------------------------------------------------------- #
 # JSONL
 # ---------------------------------------------------------------------- #
-def write_jsonl(trace: RunTrace, path: str) -> str:
+def write_jsonl(trace: RunTrace, path: str,
+                diagnosis: dict | None = None) -> str:
     meta = {
         "kind": "meta",
         "schema": TRACE_SCHEMA,
@@ -39,19 +41,31 @@ def write_jsonl(trace: RunTrace, path: str) -> str:
             f.write(json.dumps(row) + "\n")
         for row in trace.timeline_rows():
             f.write(json.dumps(row) + "\n")
+        if diagnosis is not None:
+            f.write(json.dumps({"kind": "diagnosis", **diagnosis},
+                               sort_keys=True) + "\n")
     return path
 
 
 def read_jsonl(path: str) -> RunTrace:
-    """Rebuild a :class:`RunTrace` from its JSONL serialization."""
+    """Rebuild a :class:`RunTrace` from its JSONL serialization.
+
+    Accepts any schema in :data:`~repro.obs.schema.TRACE_SCHEMAS`.
+    Dispatch is by explicit ``kind`` — a ``diagnosis`` record (or any
+    future kind) is surfaced via :func:`read_jsonl_diagnosis`, never
+    misfiled as a timeline row.
+    """
     with open(path) as f:
         meta = json.loads(f.readline())
-        if meta.get("schema") != TRACE_SCHEMA:
-            raise ValueError(f"not a {TRACE_SCHEMA} file: {path}")
+        if meta.get("schema") not in TRACE_SCHEMAS:
+            raise ValueError(f"not a {'/'.join(TRACE_SCHEMAS)} file: {path}")
         dec_rows, tl_rows = [], []
         for line in f:
             row = json.loads(line)
-            (dec_rows if row["kind"] == "decision" else tl_rows).append(row)
+            if row["kind"] == "decision":
+                dec_rows.append(row)
+            elif row["kind"] == "timeline":
+                tl_rows.append(row)
 
     oscs = np.asarray(meta["oscs"], dtype=np.int64)
     n, m = meta["n_intervals"], len(oscs)
@@ -99,20 +113,41 @@ def read_jsonl(path: str) -> RunTrace:
                     tick_seconds=meta["tick_seconds"])
 
 
+def read_jsonl_diagnosis(path: str) -> dict | None:
+    """The file's ``diagnosis`` record, if one was stamped."""
+    with open(path) as f:
+        meta = json.loads(f.readline())
+        if meta.get("schema") not in TRACE_SCHEMAS:
+            raise ValueError(f"not a {'/'.join(TRACE_SCHEMAS)} file: {path}")
+        for line in f:
+            row = json.loads(line)
+            if row["kind"] == "diagnosis":
+                return {k: v for k, v in row.items() if k != "kind"}
+    return None
+
+
 # ---------------------------------------------------------------------- #
 # Chrome trace_event (Perfetto)
 # ---------------------------------------------------------------------- #
 _OST_PID = 1          # process grouping the per-OST counter tracks
 _IF_PID = 2           # process grouping the per-interface decision rows
+_DIAG_PID = 3         # process carrying diagnosis verdict markers
 
 
-def chrome_trace(trace: RunTrace) -> dict:
+def chrome_trace(trace: RunTrace, diagnosis: dict | None = None) -> dict:
     """The run as a Chrome ``trace_event`` object (JSON-serializable).
 
     Counter events (``ph: "C"``) per OST — throughput derived from the
     cumulative byte counters between samples — and instant events
     (``ph: "i"``) per interface decision.  ``ts`` is simulated time in
     microseconds; events are emitted time-sorted.
+
+    With ``diagnosis`` (a :mod:`repro.obs.diagnose` report), a third
+    process carries the verdict: one process-scoped instant at t=0
+    naming the dominant cause (arm throughputs in ``args``) plus one
+    instant per evidence row, landed on the *same* interval timestamps
+    as the decision rows they explain, so cause markers line up with
+    the decisions they indict in Perfetto.
     """
     events = [
         {"ph": "M", "pid": _OST_PID, "name": "process_name",
@@ -187,23 +222,52 @@ def chrome_trace(trace: RunTrace) -> dict:
                     "p_max": round(float(d["probs"][i, j].max())
                                    if d["probs"].shape[2] else 0.0, 4),
                 }})
+    if diagnosis is not None:
+        cause = diagnosis.get("cause", "unknown")
+        events.append({"ph": "M", "pid": _DIAG_PID, "name": "process_name",
+                       "args": {"name": "diagnosis"}})
+        events.append({"ph": "M", "pid": _DIAG_PID, "tid": 0,
+                       "name": "thread_name",
+                       "args": {"name": f"cause:{cause}"}})
+        timed.append({"ph": "i", "s": "p", "pid": _DIAG_PID, "tid": 0,
+                      "ts": 0.0, "name": f"verdict:{cause}",
+                      "args": {"losing": diagnosis.get("losing"),
+                               "arms": diagnosis.get("arms", {}),
+                               "n_evidence_total":
+                               diagnosis.get("n_evidence_total")}})
+        for row in diagnosis.get("evidence", []):
+            if "t" not in row:       # arm-summary rows carry no timestamp
+                continue
+            # land on the trace's own interval timestamp (the evidence
+            # rounds t for the report; the raw floats must match the
+            # decision instants exactly to line up in Perfetto)
+            i = row.get("interval", -1)
+            ts = (float(d["t"][i]) * 1e6 if 0 <= i < len(d["t"])
+                  else float(row["t"]) * 1e6)
+            timed.append({"ph": "i", "s": "p", "pid": _DIAG_PID, "tid": 0,
+                          "ts": ts, "name": cause,
+                          "args": {k: v for k, v in row.items()
+                                   if k != "t"}})
     timed.sort(key=lambda e: e["ts"])
     return {"traceEvents": events + timed,
             "displayTimeUnit": "ms",
             "otherData": {"schema": TRACE_SCHEMA}}
 
 
-def write_chrome(trace: RunTrace, path: str) -> str:
+def write_chrome(trace: RunTrace, path: str,
+                 diagnosis: dict | None = None) -> str:
     with open(path, "w") as f:
-        json.dump(chrome_trace(trace), f)
+        json.dump(chrome_trace(trace, diagnosis=diagnosis), f)
     return path
 
 
 # ---------------------------------------------------------------------- #
 # markdown summary
 # ---------------------------------------------------------------------- #
-def render_summary(trace: RunTrace, title: str = "trace") -> str:
-    """Human-readable digest: gate outcomes, θ trajectory, hot OSTs."""
+def render_summary(trace: RunTrace, title: str = "trace",
+                   diagnosis: dict | None = None) -> str:
+    """Human-readable digest: gate outcomes, θ trajectory, hot OSTs —
+    plus the counterfactual verdict when a diagnosis rides along."""
     d = trace.decisions
     n, m = trace.n_intervals, trace.n_interfaces
     lines = [f"# Trace summary — {title}", ""]
@@ -260,5 +324,23 @@ def render_summary(trace: RunTrace, title: str = "trace") -> str:
             lines.append(f"| {o} | {rd / 1e6:.1f} | {wr / 1e6:.1f} | "
                          f"{tl['queue_bytes'][:, o].max() / 1e6:.1f} | "
                          f"{tl['dirty_room'][:, o].min() / 1e6:.1f} |")
+        lines.append("")
+    if diagnosis is not None:
+        lines.append("## Diagnosis")
+        lines.append("")
+        lines.append(f"Dominant cause: **{diagnosis.get('cause', '?')}** "
+                     f"(losing: {diagnosis.get('losing')}).")
+        arms = diagnosis.get("arms", {})
+        if arms:
+            lines.append("")
+            lines.append("| arm | MB/s |")
+            lines.append("|---|---|")
+            for arm, mbs in arms.items():
+                lines.append(f"| {arm} | {float(mbs):.1f} |")
+        n_ev = diagnosis.get("n_evidence_total", 0)
+        shown = len(diagnosis.get("evidence", []))
+        lines.append("")
+        lines.append(f"{n_ev} evidence row(s) ({shown} in report); see "
+                     f"the JSONL `diagnosis` record for the full rows.")
         lines.append("")
     return "\n".join(lines)

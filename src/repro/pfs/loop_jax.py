@@ -76,6 +76,78 @@ from repro.pfs.state import (READ, WRITE, Disturbance, SimParams, SimState,
 from repro.pfs.workloads import WorkloadState, WorkloadTable
 
 
+class Intervention(NamedTuple):
+    """Per-interface counterfactual knobs for one fused run.
+
+    The diagnosis engine (:mod:`repro.obs.diagnose`) re-runs a scenario
+    under these interventions and diffs the resulting traces against
+    the factual run.  They ride the same mechanism as the trace taps:
+    one extra run-constant input pytree on :meth:`FusedLoop.run`, with
+    the unintervened graph (``intervene=None``) literally unchanged.
+    Every field is built from ``jnp.where``/boolean masks whose neutral
+    values are exact identities, so an *all-neutral* intervention
+    reproduces the factual run bit-for-bit (θ exact, counters ≤1e-6 —
+    tests/test_diagnose.py pins this on the fused, batched, and
+    sharded paths).
+
+    ``pin_mask``/``pin_theta``  after every interval's write-back the
+                                interface's knobs are forced to
+                                ``pin_theta`` — the best-static-oracle
+                                replay (pin from t=0 by also building
+                                the scenario with ``initial_theta`` =
+                                the pin).  The decision graph still
+                                runs, so the trace shows what DIAL
+                                *would* have chosen on the pinned
+                                trajectory.
+    ``force_gates``             the volume and steadiness gates are
+                                treated as open (warmup and the tune
+                                mask still apply) — decisions that were
+                                gate-blocked in the factual run fire.
+    ``freeze``                  decisions are never applied (θ holds at
+                                its initial value) — DIAL's own knob
+                                churn, its in-loop exploration, zeroed.
+
+    Shapes: ``(n,)`` bool masks and ``(n, 2)`` pinned knobs per
+    interface; batched loops take a leading batch axis like every other
+    per-element input.
+    """
+
+    pin_mask: np.ndarray
+    pin_theta: np.ndarray
+    force_gates: np.ndarray
+    freeze: np.ndarray
+
+    @classmethod
+    def neutral(cls, n: int, batch: int | None = None) -> "Intervention":
+        """The do-nothing intervention (the bit-neutrality arm)."""
+        lead = (n,) if batch is None else (int(batch), n)
+        return cls(pin_mask=np.zeros(lead, dtype=bool),
+                   pin_theta=np.zeros(lead + (2,), dtype=np.int64),
+                   force_gates=np.zeros(lead, dtype=bool),
+                   freeze=np.zeros(lead, dtype=bool))
+
+    @classmethod
+    def pin(cls, n: int, theta, batch: int | None = None) -> "Intervention":
+        """Pin every interface to ``theta = (window_pages, rpcs)``."""
+        iv = cls.neutral(n, batch=batch)
+        return iv._replace(
+            pin_mask=np.ones_like(iv.pin_mask),
+            pin_theta=np.broadcast_to(
+                np.asarray(theta, dtype=np.int64),
+                iv.pin_theta.shape).copy())
+
+    @classmethod
+    def gates_open(cls, n: int, batch: int | None = None) -> "Intervention":
+        iv = cls.neutral(n, batch=batch)
+        return iv._replace(force_gates=np.ones_like(iv.force_gates))
+
+    @classmethod
+    def freeze_theta(cls, n: int,
+                     batch: int | None = None) -> "Intervention":
+        iv = cls.neutral(n, batch=batch)
+        return iv._replace(freeze=np.ones_like(iv.freeze))
+
+
 class Probe(NamedTuple):
     """Cumulative counters the decision loop reads off ``SimState``.
 
@@ -391,7 +463,7 @@ class FusedLoop:
                 return state, wstate
             return state, wstate, trace
 
-        def run(table, state, wstate, sched, tune_mask):
+        def run(table, state, wstate, sched, tune_mask, iv=None):
             hist0 = (jnp.zeros((kp1, n, N_READ)),
                      jnp.zeros((kp1, n, N_WRITE)),
                      jnp.zeros((kp1, n)), jnp.zeros((kp1, n)))
@@ -420,7 +492,15 @@ class FusedLoop:
                 ratio = v1 / jnp.maximum(v0, 1.0)
                 steady = (ratio >= 0.5) & (ratio <= 2.0)
                 warm = tick >= warm_from
-                decide = active & steady & warm & tune_mask
+                # interventions (iv) are a trace-time branch: iv=None
+                # compiles the exact unintervened graph, and the
+                # neutral intervention is an arithmetic identity (all
+                # masks False) — counterfactual replays stay diffable
+                # row-for-row against the factual run
+                gate_ok = active & steady
+                if iv is not None:
+                    gate_ok = gate_ok | iv.force_gates
+                decide = gate_ok & warm & tune_mask
 
                 # features + one fused paired-forest pass for all rows
                 x_r = features(hr, N_READ, READ_KNOB_IDX)
@@ -441,12 +521,18 @@ class FusedLoop:
                 theta, changed, n_cand, score = score_greedy_arrays(
                     probs, ops, cur_theta, theta_raw, tp, xp=jnp)
                 apply = decide & changed
+                if iv is not None:
+                    apply = apply & ~iv.freeze
+                new_wp = jnp.where(apply, theta[:, 0], state.window_pages)
+                new_rf = jnp.where(apply, theta[:, 1],
+                                   state.rpcs_in_flight)
+                if iv is not None:
+                    new_wp = jnp.where(iv.pin_mask, iv.pin_theta[:, 0],
+                                       new_wp)
+                    new_rf = jnp.where(iv.pin_mask, iv.pin_theta[:, 1],
+                                       new_rf)
                 state = dataclasses.replace(
-                    state,
-                    window_pages=jnp.where(apply, theta[:, 0],
-                                           state.window_pages),
-                    rpcs_in_flight=jnp.where(apply, theta[:, 1],
-                                             state.rpcs_in_flight))
+                    state, window_pages=new_wp, rpcs_in_flight=new_rf)
 
                 ys = {"decided": decide, "ops": ops, "theta": theta,
                       "changed": changed, "n_candidates": n_cand,
@@ -472,21 +558,33 @@ class FusedLoop:
         fn = run if self.tuned else run_untuned
         if self.batched:
             fn = jax.vmap(fn)
-        if self.mesh is not None:
-            # one spec per argument pytree, prefix-broadcast to every
-            # leaf: the leading batch axis shards, everything trailing
-            # (interfaces, workload rows, ticks) stays device-local.
-            # The scanned body has no collectives, so each shard is an
-            # independent fleet slice — the paper's decentralization,
-            # literal in the partitioning.
-            spec = PartitionSpec(self.mesh.axis_names[0])
-            n_args = 5 if self.tuned else 4
-            fn = shard_map(fn, mesh=self.mesh,
-                           in_specs=(spec,) * n_args, out_specs=spec)
-        # donate state + wstate: the engine consumes its own previous
-        # state, so at fleet scale keeping the input alive across the
-        # dispatch would double peak device memory for no reader
-        self._run = jax.jit(fn, donate_argnums=(1, 2))
+        self._fn = fn
+        # per-arity jitted programs: the tuned loop optionally takes an
+        # Intervention pytree as a sixth argument (counterfactual
+        # replays, repro.obs.diagnose); shard_map needs one in_spec per
+        # call-time argument, so the wrapped callable is built per arity
+        # and cached.  donate state + wstate: the engine consumes its
+        # own previous state, so at fleet scale keeping the input alive
+        # across the dispatch would double peak device memory for no
+        # reader.
+        self._jits: dict = {}
+        self._run = self._get_run(5 if self.tuned else 4)
+
+    def _get_run(self, n_args: int):
+        if n_args not in self._jits:
+            fn = self._fn
+            if self.mesh is not None:
+                # one spec per argument pytree, prefix-broadcast to
+                # every leaf: the leading batch axis shards, everything
+                # trailing (interfaces, workload rows, ticks) stays
+                # device-local.  The scanned body has no collectives,
+                # so each shard is an independent fleet slice — the
+                # paper's decentralization, literal in the partitioning.
+                spec = PartitionSpec(self.mesh.axis_names[0])
+                fn = shard_map(fn, mesh=self.mesh,
+                               in_specs=(spec,) * n_args, out_specs=spec)
+            self._jits[n_args] = jax.jit(fn, donate_argnums=(1, 2))
+        return self._jits[n_args]
 
     # ------------------------------------------------------------------ #
     def run_trace(self, result: "FusedLoopResult"):
@@ -518,7 +616,8 @@ class FusedLoop:
     def run(self, table: WorkloadTable, state: SimState,
             wstate: WorkloadState, n_intervals: int,
             schedule: Disturbance | None = None,
-            tune_mask: np.ndarray | None = None) -> FusedLoopResult:
+            tune_mask: np.ndarray | None = None,
+            intervene: "Intervention | None" = None) -> FusedLoopResult:
         """Advance ``n_intervals`` of engine + tuning in one dispatch.
 
         ``schedule`` is a whole-run :class:`Disturbance` with a flat
@@ -527,12 +626,18 @@ class FusedLoop:
         caller, not rebuilt per interval.  ``tune_mask`` restricts which
         interfaces may decide (default: all).  Numpy in, numpy out.
 
+        ``intervene`` (tuned loops only) applies a per-interface
+        :class:`Intervention` counterfactual — ``None`` leaves the
+        compiled program literally unchanged.
+
         With ``mesh=``, a batch that does not divide the device count is
         padded with copies of element 0 whose ``tune_mask`` is forced
         ``False`` (phantom elements never decide); every output is
         sliced back to the caller's batch before returning.
         """
         n_intervals = int(n_intervals)
+        if intervene is not None and not self.tuned:
+            raise ValueError("intervene= requires a tuned loop")
         if schedule is None:
             schedule = self.neutral_schedule(n_intervals)
             if self.batched:
@@ -556,6 +661,18 @@ class FusedLoop:
                     [tune_mask,
                      np.zeros((n_pad,) + tune_mask.shape[1:], dtype=bool)])
             args = args + (tune_mask,)
+            if intervene is not None:
+                if n_pad:
+                    # phantom rows get the neutral intervention: they
+                    # never decide, and neutral masks are arithmetic
+                    # identities, so padding cannot perturb anything.
+                    intervene = jax.tree.map(
+                        lambda a: np.concatenate(
+                            [np.asarray(a),
+                             np.zeros((n_pad,) + np.asarray(a).shape[1:],
+                                      dtype=np.asarray(a).dtype)]),
+                        intervene)
+                args = args + (intervene,)
 
         with enable_x64():
             if self.mesh is not None:
@@ -573,7 +690,9 @@ class FusedLoop:
                 with self.timers.phase("device_put"):
                     jargs = jax.tree.map(jnp.asarray, args)
             with self.timers.phase("dispatch"):
-                out = self._run(*jargs)
+                run_fn = (self._get_run(6) if intervene is not None
+                          else self._run)
+                out = run_fn(*jargs)
                 out = jax.tree.map(
                     lambda x: x.block_until_ready()
                     if hasattr(x, "block_until_ready") else x, out)

@@ -1,0 +1,365 @@
+"""Counterfactual diagnosis: the neutral intervention must reproduce
+the factual run bit-for-bit (fused, batched, and 8-device sharded),
+each intervention arm must bend exactly the trajectory it claims to
+bend on a scenario constructed to trigger it, and the diagnosis report
+must be byte-identical across invocations.
+"""
+
+import dataclasses
+import filecmp
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.lab.batch import run_batch, stack_scenarios  # noqa: E402
+from repro.lab.scenarios import (ScenarioSpec, build, get_scenario,
+                                 variants)  # noqa: E402
+from repro.obs.schema import RunTrace, TraceConfig  # noqa: E402
+from repro.pfs.engine import WRITE  # noqa: E402
+from repro.pfs.loop_jax import Intervention  # noqa: E402
+from repro.pfs.workloads import sequential_stream  # noqa: E402
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_CTRS = ("ctr_bytes_done", "ctr_rpcs_sent", "ctr_latency_sum",
+         "ctr_pending_integral", "ctr_block_time")
+
+
+def _run(specs, model, iv=None, seconds=4.0, trace=None):
+    batch = stack_scenarios([build(s) for s in specs])
+    result = run_batch(batch, model=model, seconds=seconds, interval=0.5,
+                       fused=True, intervene=iv, trace=trace)
+    return batch, result
+
+
+def _knobs(batch):
+    return (np.asarray(batch.state.window_pages),
+            np.asarray(batch.state.rpcs_in_flight))
+
+
+# ---------------------------------------------------------------------- #
+# tentpole: the neutral intervention is an exact identity
+# ---------------------------------------------------------------------- #
+def test_neutral_intervention_bit_neutral_fused(dial_model):
+    """iv=neutral runs the *intervened* compiled graph; every masked
+    write-back is an arithmetic identity, so θ is bit-equal and the
+    counters exactly match the unintervened dispatch."""
+    spec = get_scenario("filebench_mix")
+    b0, _ = _run([spec], dial_model)
+    n = b0.n_osc
+    b1, _ = _run([spec], dial_model, iv=Intervention.neutral(n, batch=1))
+    for a, b in zip(_knobs(b0), _knobs(b1)):
+        np.testing.assert_array_equal(a, b)
+    for f in _CTRS:
+        np.testing.assert_array_equal(np.asarray(getattr(b0.state, f)),
+                                      np.asarray(getattr(b1.state, f)),
+                                      err_msg=f)
+
+
+def test_neutral_intervention_bit_neutral_batched(dial_model):
+    specs = variants(get_scenario("vpic_checkpoint"), 3, seed=7)
+    b0, _ = _run(specs, dial_model, seconds=3.0)
+    n = b0.n_osc
+    b1, _ = _run(specs, dial_model, seconds=3.0,
+                 iv=Intervention.neutral(n, batch=len(specs)))
+    for a, b in zip(_knobs(b0), _knobs(b1)):
+        np.testing.assert_array_equal(a, b)
+    for f in _CTRS:
+        np.testing.assert_array_equal(np.asarray(getattr(b0.state, f)),
+                                      np.asarray(getattr(b1.state, f)),
+                                      err_msg=f)
+
+
+def test_neutral_intervention_bit_neutral_sharded_8dev():
+    """Same identity under an 8-forced-host-device mesh: phantom pad
+    rows get the zero (neutral) intervention, real rows reproduce the
+    unmeshed-unintervened run exactly."""
+    code = """
+import numpy as np
+from repro.core.gbdt import GBDTClassifier, GBDTParams
+from repro.core.metrics import feature_dim
+from repro.core.model import DIALModel
+from repro.pfs.state import READ, WRITE
+
+rng = np.random.default_rng(0)
+def _forest(dim):
+    x = rng.normal(size=(400, dim)).astype(np.float32)
+    y = (x[:, 0] + x[:, -1] > -1.0).astype(np.int64)
+    return GBDTClassifier(GBDTParams(n_trees=8, max_depth=3)).fit(x, y).forest
+k = 1
+model = DIALModel(read_forest=_forest(feature_dim(READ, k)),
+                  write_forest=_forest(feature_dim(WRITE, k)),
+                  backend="jax", k=k)
+
+from repro.distributed.sharding import fleet_mesh
+from repro.lab.batch import run_batch, stack_scenarios
+from repro.lab.scenarios import build, get_scenario, variants
+from repro.pfs.loop_jax import Intervention
+
+specs = variants(get_scenario("vpic_checkpoint"), 5, seed=3)
+mesh = fleet_mesh(8)
+
+b0 = stack_scenarios([build(s) for s in specs])
+run_batch(b0, model=model, seconds=3.0, interval=0.5, fused=True)
+
+b1 = stack_scenarios([build(s) for s in specs])
+iv = Intervention.neutral(b1.n_osc, batch=len(specs))
+run_batch(b1, model=model, seconds=3.0, interval=0.5, fused=True,
+          mesh=mesh, intervene=iv)
+
+assert np.array_equal(np.asarray(b0.state.window_pages),
+                      np.asarray(b1.state.window_pages))
+assert np.array_equal(np.asarray(b0.state.rpcs_in_flight),
+                      np.asarray(b1.state.rpcs_in_flight))
+np.testing.assert_allclose(np.asarray(b0.state.ctr_bytes_done),
+                           np.asarray(b1.state.ctr_bytes_done),
+                           rtol=1e-6, atol=1e-6)
+print("NEUTRAL-MESH-OK")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=600, cwd=REPO)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "NEUTRAL-MESH-OK" in out.stdout
+
+
+# ---------------------------------------------------------------------- #
+# each intervention kind bends the trajectory it claims to bend
+# ---------------------------------------------------------------------- #
+def test_pin_forces_theta_everywhere(dial_model):
+    """pin(θ*) overrides every interval's write-back: final knobs are
+    the pin, and the θ trajectory departs from the factual run."""
+    spec = get_scenario("filebench_mix")          # starts at (64, 2)
+    tcfg = TraceConfig(timeline=False)
+    b0, r0 = _run([spec], dial_model, trace=tcfg)
+    n = b0.n_osc
+    pin = (256, 8)
+    b1, r1 = _run([spec], dial_model, trace=tcfg,
+                  iv=Intervention.pin(n, pin, batch=1))
+    wp, rf = _knobs(b1)
+    assert (wp == pin[0]).all() and (rf == pin[1]).all()
+    t0 = RunTrace.from_fused(r0, tcfg, b0.params.tick)
+    t1 = RunTrace.from_fused(r1, tcfg, b1.params.tick)
+    assert not np.array_equal(t0.decisions["theta"], t1.decisions["theta"])
+
+
+def test_freeze_holds_theta_at_initial(dial_model):
+    """freeze computes decisions but never applies them — the recovery
+    scenario's factual run changes θ, the frozen run cannot."""
+    spec = get_scenario("filebench_mix")          # pathological start
+    tcfg = TraceConfig(timeline=False)
+    b0, r0 = _run([spec], dial_model, trace=tcfg)
+    t0 = RunTrace.from_fused(r0, tcfg, b0.params.tick)
+    assert t0.decisions["changed"].sum() > 0, \
+        "scenario no longer triggers factual θ changes"
+    n = b0.n_osc
+    b1, _ = _run([spec], dial_model,
+                 iv=Intervention.freeze_theta(n, batch=1))
+    wp, rf = _knobs(b1)
+    assert (wp == spec.initial_theta[0]).all()
+    assert (rf == spec.initial_theta[1]).all()
+
+
+def test_gates_open_fires_blocked_decisions(dial_model):
+    """On a fleet where most interfaces are idle the volume gate blocks
+    their warm rows; forcing the gates open fires those decisions."""
+    spec = ScenarioSpec(
+        name="gate_trigger", n_clients=4, n_osts=2,
+        workloads=(sequential_stream(0, WRITE, 2 * 2**20, ost=0,
+                                     n_threads=2),),
+        initial_theta=(64, 2))
+    tcfg = TraceConfig(timeline=False)
+    b0, r0 = _run([spec], dial_model, trace=tcfg)
+    t0 = RunTrace.from_fused(r0, tcfg, b0.params.tick)
+    d0 = t0.decisions
+    blocked = (d0["warm"] & ~d0["decided"]).sum()
+    assert blocked > 0, "scenario no longer gate-blocks any warm row"
+    n = b0.n_osc
+    b1, r1 = _run([spec], dial_model, trace=tcfg,
+                  iv=Intervention.gates_open(n, batch=1))
+    t1 = RunTrace.from_fused(r1, tcfg, b1.params.tick)
+    d1 = t1.decisions
+    assert d1["decided"].sum() > d0["decided"].sum()
+    # warmup still applies: gates_open never decides a cold row
+    assert not (d1["decided"] & ~d1["warm"]).any()
+
+
+def test_intervene_requires_fused_and_tuned(dial_model):
+    spec = get_scenario("filebench_mix")
+    batch = stack_scenarios([build(spec)])
+    iv = Intervention.neutral(batch.n_osc, batch=1)
+    with pytest.raises(ValueError, match="fused"):
+        run_batch(batch, model=dial_model, seconds=1.0, interval=0.5,
+                  intervene=iv)
+
+
+# ---------------------------------------------------------------------- #
+# the diagnosis engine + report determinism
+# ---------------------------------------------------------------------- #
+def _dcfg():
+    from repro.obs.diagnose import DiagnoseConfig
+    return DiagnoseConfig(seconds=2.0, interval=0.5,
+                          thetas=((64, 2), (256, 8)), max_evidence=4)
+
+
+def test_diagnose_structure_and_taxonomy(dial_model):
+    from repro.obs.diagnose import ARMS, CAUSES, DIAGNOSIS_SCHEMA, diagnose
+
+    d = diagnose(get_scenario("filebench_mix"), dial_model, _dcfg())
+    assert d["schema"] == DIAGNOSIS_SCHEMA
+    assert d["cause"] in CAUSES
+    assert set(d["arms"]) == set(ARMS)
+    assert set(d["signals"]) >= {"blocked_share", "nocand_share",
+                                 "converged_interval",
+                                 "theta_star_in_grid"}
+    assert d["n_intervals"] == 4
+    if d["losing"]:
+        assert d["cause"] != "none" and d["evidence"]
+        assert d["n_evidence_total"] >= len(d["evidence"])
+    else:
+        assert d["cause"] == "none"
+    assert "gap_mbs" in d["recovery"]
+
+
+def test_diagnosis_report_byte_identical(dial_model, tmp_path):
+    """Same (spec, model, config) -> byte-identical diagnosis.json and
+    diagnosis.md — the fuzz-report cmp pattern."""
+    from repro.obs.diagnose import diagnose, write_diagnosis_report
+
+    spec = get_scenario("filebench_mix")
+    outs = []
+    for rep in ("a", "b"):
+        d = diagnose(spec, dial_model, _dcfg())
+        outs.append(write_diagnosis_report([d], str(tmp_path / rep)))
+    (j1, m1), (j2, m2) = outs
+    assert filecmp.cmp(j1, j2, shallow=False)
+    assert filecmp.cmp(m1, m2, shallow=False)
+
+
+def test_fuzz_stamps_diagnoses(dial_model):
+    """A diagnosing sweep stamps every triaged loser with a diagnosis
+    whose cause lands in the summary's per-cause counts."""
+    import dataclasses as dc
+
+    from repro.lab.fuzz import SMOKE, run_sweep
+
+    cfg = dc.replace(SMOKE, n_scenarios=8, seconds=2.0,
+                     loss_threshold=0.01)
+    report = run_sweep(cfg, dial_model, diagnose=True, max_diagnoses=4)
+    losses = report["triage"]["losses"]
+    if not losses:
+        pytest.skip("sweep produced no triaged losers at 1%")
+    n_diag = min(len(losses), 4)
+    assert report["summary"]["n_diagnosed"] == n_diag
+    for r in losses[:n_diag]:
+        d = r["diagnosis"]
+        assert d["cause"] != "none" and d["losing"]
+        assert d["evidence"]
+        # the stamped race figures are the sweep's own, not re-raced
+        assert d["race"]["dial_mbs"] == r["dial_mbs"]
+    counts = report["summary"]["loss_causes"]
+    assert sum(counts.values()) == n_diag
+
+
+def test_curriculum_buckets_by_cause(dial_model, tmp_path):
+    """The hard-case curriculum reports a before/after loss rate per
+    diagnosed cause bucket (and replays weighted by cause)."""
+    import dataclasses as dc
+    import json
+
+    from repro.lab.continual import (CAUSE_WEIGHTS,
+                                     run_hard_case_curriculum,
+                                     write_curriculum_report)
+    from repro.lab.fuzz import SMOKE, run_sweep, write_fuzz_report
+
+    cfg = dc.replace(SMOKE, n_scenarios=8, seconds=2.0,
+                     loss_threshold=0.01)
+    report = run_sweep(cfg, dial_model, diagnose=True, max_diagnoses=4)
+    if not report["triage"]["losses"]:
+        pytest.skip("sweep produced no triaged losers at 1%")
+    jpath, _ = write_fuzz_report(report, str(tmp_path / "fuzz"))
+
+    model = dataclasses.replace(dial_model)       # curriculum mutates it
+    cur = run_hard_case_curriculum(jpath, model, seconds=2.0,
+                                   interval=0.5, max_cases=2)
+    assert cur["schema"] == "dial-curriculum-v1"
+    assert cur["n_losers"] == min(2, len(report["triage"]["losses"]))
+    assert cur["n_replays"] == sum(
+        CAUSE_WEIGHTS.get(c["cause"], 1) for c in cur["cases"])
+    assert set(cur["overall"]) == {"before_loss_rate", "after_loss_rate",
+                                   "delta"}
+    for cause, b in cur["buckets"].items():
+        assert b["n"] >= 1
+        assert 0.0 <= b["before_loss_rate"] <= 1.0
+        assert 0.0 <= b["after_loss_rate"] <= 1.0
+    assert sum(b["n"] for b in cur["buckets"].values()) == cur["n_losers"]
+    path = write_curriculum_report(cur, str(tmp_path / "cur"))
+    assert json.load(open(path))["schema"] == "dial-curriculum-v1"
+
+
+def test_trace_sinks_carry_diagnosis(dial_model, tmp_path):
+    """write_trace(diagnosis=...) stamps the verdict into all three
+    sinks; the Chrome instants land on decision-interval timestamps."""
+    import json
+
+    from repro.lab.trace import trace_scenario, write_trace
+    from repro.obs.diagnose import diagnose
+    from repro.obs.sinks import read_jsonl, read_jsonl_diagnosis
+
+    spec = get_scenario("filebench_mix")
+    trace = trace_scenario(spec, dial_model, seconds=2.0,
+                           config=TraceConfig(timeline=False))
+    d = diagnose(spec, dial_model, _dcfg())
+    paths = write_trace(trace, str(tmp_path), diagnosis=d)
+
+    back = read_jsonl(paths["jsonl"])
+    back.validate()
+    stamped = read_jsonl_diagnosis(paths["jsonl"])
+    assert stamped is not None and stamped["cause"] == d["cause"]
+
+    doc = json.load(open(paths["chrome"]))
+    diag = [e for e in doc["traceEvents"] if e.get("pid") == 3]
+    assert any(e.get("ph") == "i" for e in diag)
+    dec_ts = {e["ts"] for e in doc["traceEvents"]
+              if e.get("pid") == 2 and e.get("ph") == "i"}
+    for e in diag:
+        if e.get("ph") == "i" and e["ts"] > 0:
+            assert e["ts"] in dec_ts
+    assert "## Diagnosis" in open(paths["md"]).read()
+
+
+def test_read_jsonl_ignores_unknown_kinds(dial_model, tmp_path):
+    """Explicit kind dispatch: a diagnosis (or unknown) record must
+    never be misfiled as a timeline row, and v1 files still read."""
+    import json
+
+    from repro.lab.trace import trace_scenario
+    from repro.obs.sinks import read_jsonl, write_jsonl
+
+    trace = trace_scenario(get_scenario("filebench_mix"), dial_model,
+                           seconds=2.0,
+                           config=TraceConfig(timeline=False))
+    p = str(tmp_path / "t.jsonl")
+    write_jsonl(trace, p, diagnosis={"cause": "inherent", "evidence": []})
+    with open(p) as f:
+        lines = f.read().splitlines()
+    # downgrade the header to v1 and append an unknown kind
+    meta = json.loads(lines[0])
+    meta["schema"] = "dial-trace-v1"
+    lines[0] = json.dumps(meta)
+    lines.append(json.dumps({"kind": "someday", "x": 1}))
+    with open(p, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    back = read_jsonl(p)
+    back.validate()
+    assert back.timeline is None
+    np.testing.assert_array_equal(back.decisions["theta"],
+                                  trace.decisions["theta"])

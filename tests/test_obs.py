@@ -380,3 +380,43 @@ def test_compare_direction_and_gate(tmp_path):
     assert main([pb, pb]) == 0
     assert main([pb, pc]) == 1
     assert main([pb, pc, "--report-only"]) == 0
+
+
+def test_compare_asymmetric_records(tmp_path):
+    """Metrics on only one side: first-class new/removed rows in the
+    table (and render), never a gate failure."""
+    sys.path.insert(0, REPO)
+    try:
+        from benchmarks.compare import compare, main, render
+    finally:
+        sys.path.remove(REPO)
+
+    base = {"schema": "dial-bench-v1", "benchmarks": [
+        {"name": "x", "us_per_call": 100, "derived": {"speedup": 10.0}},
+        {"name": "old", "us_per_call": 50, "derived": {"exec_ms": 3.0}}]}
+    cand = {"schema": "dial-bench-v1", "benchmarks": [
+        {"name": "x", "us_per_call": 110, "derived": {"speedup": 10.1}},
+        {"name": "fresh", "us_per_call": 70, "derived": {"gain": 2.0}}]}
+    r = compare(base, cand)
+    verdicts = {row["metric"]: row["verdict"] for row in r["rows"]}
+    assert verdicts["old.exec_ms"] == "removed"
+    assert verdicts["old.us_per_call"] == "removed"
+    assert verdicts["fresh.gain"] == "new"
+    assert verdicts["fresh.us_per_call"] == "new"
+    # removed rows keep their baseline value, new rows their candidate
+    by_metric = {row["metric"]: row for row in r["rows"]}
+    assert by_metric["old.exec_ms"]["baseline"] == 3.0
+    assert by_metric["old.exec_ms"]["candidate"] is None
+    assert by_metric["fresh.gain"]["candidate"] == 2.0
+    assert by_metric["fresh.gain"]["baseline"] is None
+    assert r["regressions"] == []          # asymmetry never fails
+    out = render(r)
+    assert "removed" in out and "new" in out
+    assert "old.exec_ms" in out and "fresh.gain" in out
+
+    pb, pc = str(tmp_path / "b.json"), str(tmp_path / "c.json")
+    with open(pb, "w") as f:
+        json.dump(base, f)
+    with open(pc, "w") as f:
+        json.dump(cand, f)
+    assert main([pb, pc]) == 0
