@@ -1,6 +1,6 @@
 PY ?= python
 
-.PHONY: verify deps bench-fleet bench-train bench-loop bench-weak bench-json bench-compare trace-smoke lab-smoke continual-smoke fuzz-smoke diagnose-smoke
+.PHONY: verify deps bench-fleet bench-train bench-loop bench-weak bench-ragged bench-json bench-compare trace-smoke lab-smoke continual-smoke fuzz-smoke diagnose-smoke ragged-smoke
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -22,6 +22,10 @@ bench-loop:
 bench-weak:
 	PYTHONPATH=src $(PY) benchmarks/fleet_weak_scaling.py
 
+# ragged catalog economics: padded-ragged vs per-structure vs sequential
+bench-ragged:
+	PYTHONPATH=src $(PY) benchmarks/ragged_scaling.py --quick
+
 # full benchmark sweep + machine-readable perf record
 # (repo root on PYTHONPATH: run.py imports its siblings as benchmarks.*)
 bench-json:
@@ -29,7 +33,7 @@ bench-json:
 
 # regression gate: latest sweep vs the committed reference record
 # (BASELINE/CANDIDATE overridable: make bench-compare CANDIDATE=...)
-BASELINE ?= BENCH_8.json
+BASELINE ?= BENCH_10.json
 CANDIDATE ?= reports/BENCH_latest.json
 bench-compare:
 	$(PY) benchmarks/compare.py $(BASELINE) $(CANDIDATE)
@@ -60,3 +64,7 @@ fuzz-smoke:
 diagnose-smoke:
 	PYTHONPATH=src $(PY) -m repro.lab diagnose degraded_ost --smoke \
 	    --seconds 5 --out reports/diagnose
+
+# ragged padding-neutrality tests (the CI ragged-equivalence job)
+ragged-smoke:
+	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_ragged.py

@@ -35,6 +35,7 @@ def main(argv=None) -> None:
     import benchmarks.lab_scaling as labsc
     import benchmarks.loop_scaling as loopsc
     import benchmarks.obs_overhead as obsov
+    import benchmarks.ragged_scaling as raggedsc
     import benchmarks.sim_scaling as simsc
     import benchmarks.table2_h5bench as t2
     import benchmarks.table3_overhead as t3
@@ -110,6 +111,20 @@ def main(argv=None) -> None:
             {"seq_sim_s_per_s": round(rl["seq_scenario_s_per_s"], 1),
              "batch_sim_s_per_s": round(rl["batch_scenario_s_per_s"], 1),
              "speedup": round(rl["speedup"], 1)})
+
+    t0 = time.time()
+    rr = raggedsc.bench(16)
+    el = (time.time() - t0) * 1e6
+    _record(records, "ragged_scaling", el,
+            {"n_scenarios": rr["n_scenarios"],
+             "seq_dispatches": rr["sequential_dispatches"],
+             "structure_dispatches": rr["structure_dispatches"],
+             "ragged_dispatches": rr["ragged_dispatches"],
+             "ragged_loop_misses": rr["ragged_loop_misses"],
+             "ragged_sim_s_per_s": round(rr["ragged_sim_s_per_s"], 1),
+             "speedup_vs_seq": round(rr["ragged_speedup_vs_seq"], 1),
+             "speedup_vs_structure":
+                 round(rr["ragged_speedup_vs_structure"], 2)})
 
     t0 = time.time()
     rlp = loopsc.bench(256)

@@ -71,10 +71,14 @@ def _cmd_evaluate(args) -> None:
                       seconds=seconds, interval=args.interval,
                       seg_backend=args.seg_backend,
                       fused=not args.no_fused,
-                      mesh=_make_mesh(args.mesh))
+                      mesh=_make_mesh(args.mesh),
+                      ragged=not args.no_ragged)
     jpath, mpath = write_report(report, args.out)
     s = report["summary"]
     print(f"{s['n_scenarios']} scenarios -> {jpath} / {mpath}")
+    if "n_buckets" in s:
+        print(f"ragged catalog: {s['n_buckets']} buckets, "
+              f"{s['n_dispatches']} fused dispatches")
     print(f"mean DIAL vs default {s['mean_dial_vs_default']:.2f}x, "
           f"mean frac of best static "
           f"{100 * s['mean_dial_frac_of_best_static']:.1f}%")
@@ -189,11 +193,16 @@ def _cmd_fuzz(args) -> None:
              else default_model(smoke=args.smoke, root=args.models_root))
     report = run_sweep(cfg, model, mesh=_make_mesh(args.mesh),
                        diagnose=not args.no_diagnose,
-                       max_diagnoses=args.max_diagnoses)
+                       max_diagnoses=args.max_diagnoses,
+                       ragged=not args.no_ragged)
     jpath, mpath = write_fuzz_report(report, args.out)
     s = report["summary"]
-    print(f"{s['n_scenarios']} scenarios, {s['n_buckets']} buckets -> "
-          f"{jpath} / {mpath}")
+    print(f"{s['n_scenarios']} scenarios, {s['n_buckets']} buckets, "
+          f"{s['n_dispatches']} fused dispatches -> {jpath} / {mpath}")
+    for b in s["bucket_occupancy"]:
+        print(f"  bucket {b['shape']}: {b['n_specs']} specs, "
+              f"{b['dispatches']} dispatch(es), "
+              f"pad waste {100 * b['pad_waste']:.1f}%")
     causes = s.get("loss_causes")
     by_cause = ("" if causes is None else " [" + (
         ", ".join(f"{c}: {n}" for c, n in causes.items()) or "no causes")
@@ -229,6 +238,9 @@ def main(argv=None) -> None:
     ev.add_argument("--mesh", type=int, default=None, nargs="?", const=0,
                     help="shard each policy batch over N local devices "
                          "(0 or bare flag: all; needs the fused path)")
+    ev.add_argument("--no-ragged", action="store_true",
+                    help="one batch per scenario instead of pooling the "
+                         "mixed catalog into padded shape buckets")
     ev.add_argument("--out", default="reports/lab")
     ev.add_argument("--smoke", action="store_true",
                     help="CI-sized run (3 s per scenario, smoke model)")
@@ -290,6 +302,9 @@ def main(argv=None) -> None:
                          "devices with "
                          "XLA_FLAGS=--xla_force_host_platform_device_"
                          "count=N")
+    fz.add_argument("--no-ragged", action="store_true",
+                    help="bucket by exact structure instead of padded "
+                         "shape class (more dispatches, no padding)")
     fz.add_argument("--out", default="reports/fuzz")
     fz.add_argument("--smoke", action="store_true",
                     help="CI-sized sweep (64 scenarios, 3 s, 6 static "
@@ -359,6 +374,9 @@ def main(argv=None) -> None:
     dg.add_argument("--mesh", type=int, default=None, nargs="?", const=0,
                     help="run the replay arms through the sharded fused "
                          "path over N local devices (0 or bare: all)")
+    dg.add_argument("--no-ragged", action="store_true",
+                    help="replay losers one at a time instead of one "
+                         "traced dispatch per padded shape bucket")
     dg.add_argument("--out", default="reports/diagnose")
     dg.add_argument("--smoke", action="store_true",
                     help="allow the smoke-grade campaign model")

@@ -2,14 +2,25 @@
 
 The fused interval scan (:mod:`repro.pfs.engine_jax`) removed the
 per-tick Python round trip; this module removes the per-*scenario*
-process.  ``stack_scenarios`` stacks B structurally-identical
-:class:`~repro.lab.scenarios.BuiltScenario` pytrees (same topology
-dimensions, same workload-table shapes — e.g. variants/seeds of one
-spec, or a grid of homogeneous campaign cells) along a new leading batch
-axis, and :class:`BatchEngine` ``vmap``-s the identical
+process.  ``stack_scenarios`` stacks B
+:class:`~repro.lab.scenarios.BuiltScenario` pytrees along a new leading
+batch axis, and :class:`BatchEngine` ``vmap``-s the identical
 ``demand_step ∘ engine_step`` interval over that axis — hundreds of
 independent scenarios advance one tuning interval in a single device
 dispatch.
+
+Structurally-identical scenarios (same topology dimensions, same
+workload-table shapes) stack directly, exactly as before.  Mismatched
+structures stack **ragged**: every element is padded up to a shared
+bucket shape class (:func:`pad_class` — OSTs / clients / workload rows /
+stripe entries rounded to the next power of two) with phantom OSTs,
+clients, and workload rows whose parameters are exact arithmetic
+identities (zero demand, neutral disturbance, inert rows) and whose
+validity masks are off.  Padded runs pin bit-equal θ trajectories and
+≤1e-6 counters against unpadded per-scenario runs (tests/test_ragged.py)
+because every phantom contribution is a literal ``+ 0.0``.
+:func:`bucket_scenarios` groups a heterogeneous catalog by shape class
+so the whole registry executes in one fused dispatch per bucket.
 
 In-batch DIAL tuning reuses the fleet machinery unchanged: a batch of B
 scenarios with n interfaces each *is* a fleet of ``B * n`` interfaces
@@ -35,7 +46,8 @@ from repro.core.tuner import TunerParams
 from repro.kernels.segment_reduce.ops import make_segment_sum
 from repro.lab.scenarios import BuiltScenario, make_schedule
 from repro.pfs.engine_jax import engine_step_jax
-from repro.pfs.state import Disturbance, SimParams, SimState, SimTopo
+from repro.pfs.state import (_STATE_FIELDS, Disturbance, SimParams, SimState,
+                             SimTopo, init_state)
 from repro.pfs.stats import FleetStats
 from repro.pfs.workloads import WorkloadState, WorkloadTable
 
@@ -53,6 +65,11 @@ class ScenarioBatch:
     ``table`` / ``state`` / ``wstate`` arrays carry a leading ``(B, ...)``
     batch axis; ``specs`` keeps the per-element provenance (used to
     rebuild each element's disturbance schedule every interval).
+
+    Ragged (pad-and-mask) batches additionally carry ``osc_cols`` — one
+    int array per element listing its *real* interface columns within
+    the padded layout, in original interface order.  Empty ``osc_cols``
+    means nothing was padded (every column real), the historical layout.
     """
 
     params: SimParams
@@ -61,6 +78,7 @@ class ScenarioBatch:
     state: SimState             # batched arrays
     wstate: WorkloadState       # batched arrays
     specs: tuple = ()           # per-element ScenarioSpec (may be empty)
+    osc_cols: tuple = ()        # per-element real columns (ragged only)
 
     def __len__(self) -> int:
         return int(np.asarray(self.state.window_pages).shape[0])
@@ -68,6 +86,29 @@ class ScenarioBatch:
     @property
     def n_osc(self) -> int:
         return self.topo.n_osc
+
+    def element_cols(self, b: int) -> np.ndarray:
+        """Element ``b``'s real interface columns, in original order."""
+        if self.osc_cols:
+            return np.asarray(self.osc_cols[b], dtype=np.int64)
+        return np.arange(self.n_osc, dtype=np.int64)
+
+    def real_tune_cols(self) -> np.ndarray:
+        """Fleet columns (``b * n + osc``) of every real interface."""
+        n = self.n_osc
+        return np.concatenate([b * n + self.element_cols(b)
+                               for b in range(len(self))])
+
+    def pad_stats(self) -> dict:
+        """Padding-waste accounting (the fuzz histogram's raw numbers)."""
+        n = self.n_osc
+        real = sum(len(self.element_cols(b)) for b in range(len(self)))
+        total = len(self) * n
+        return {"n_elems": len(self), "n_osc": n,
+                "real_interfaces": int(real),
+                "phantom_interfaces": int(total - real),
+                "total_interfaces": int(total),
+                "pad_waste": float(1.0 - real / total) if total else 0.0}
 
     def schedule(self, t0_tick: int, n_ticks: int) -> Disturbance:
         """Stacked ``(B, n_ticks, ...)`` disturbance schedule for one
@@ -82,32 +123,146 @@ class ScenarioBatch:
 
     # ------------------------------------------------------------------ #
     def throughput(self, seconds: float) -> dict:
-        """Per-element aggregate MB/s from the cumulative counters."""
+        """Per-element aggregate MB/s from the cumulative counters.
+
+        Ragged batches sum each element's real columns by ordered
+        gather, so the float summation order is exactly the unpadded
+        run's — per-element figures are bit-equal, not merely close.
+        """
         done = np.asarray(self.state.ctr_bytes_done)      # (B, 2, n)
-        read = done[:, 0].sum(axis=1) / seconds / 1e6
-        write = done[:, 1].sum(axis=1) / seconds / 1e6
+        if self.osc_cols:
+            read = np.array([done[b, 0, self.element_cols(b)].sum()
+                             for b in range(len(self))]) / seconds / 1e6
+            write = np.array([done[b, 1, self.element_cols(b)].sum()
+                              for b in range(len(self))]) / seconds / 1e6
+        else:
+            read = done[:, 0].sum(axis=1) / seconds / 1e6
+            write = done[:, 1].sum(axis=1) / seconds / 1e6
         return {"read_mbs": read, "write_mbs": write,
                 "total_mbs": read + write}
 
 
+# the structure fields strict stacking compares, in check order — the
+# refusal message names the first mismatching one with both values
+_STRUCTURE_FIELDS = ("params", "n_clients", "n_osts", "n_rows", "n_waves",
+                     "n_entries")
+
+
 def structure_key(b: BuiltScenario) -> tuple:
-    """The structural signature batch elements must share to stack.
+    """The structural signature batch elements must share to stack
+    *without padding*.
 
     Physics constants, topology dimensions, and the workload-table shape
     (rows / waves / flattened stripe entries): two built scenarios with
     equal keys always stack — and hit the same compiled vmapped program
     shape — regardless of how their workload parameters, disturbance
-    schedules, or initial knobs differ.  The fuzz sweep
-    (:mod:`repro.lab.fuzz`) groups generated specs by this key so every
-    bucket satisfies :func:`stack_scenarios`'s constraint by
-    construction.
+    schedules, or initial knobs differ.  Mismatched keys stack too via
+    ragged pad-and-mask bucketing (:func:`pad_class`); this key is the
+    strict (``ragged=False``) grouping and the zero-waste fast path.
     """
     return (b.params, b.topo.n_clients, b.topo.n_osts,
             len(b.table), b.table.n_waves, len(b.table.entry_row))
 
 
-def stack_scenarios(built: list[BuiltScenario]) -> ScenarioBatch:
-    """Stack structurally-identical built scenarios into one batch."""
+def _structure_mismatch(built: list[BuiltScenario]):
+    """First (element index, field name, value, element-0 value) whose
+    structure differs from element 0's, or ``None`` if all match."""
+    k0 = structure_key(built[0])
+    for i, b in enumerate(built[1:], start=1):
+        k = structure_key(b)
+        if k != k0:
+            f = next(j for j in range(len(k)) if k[j] != k0[j])
+            return i, _STRUCTURE_FIELDS[f], k[f], k0[f]
+    return None
+
+
+def _p2(x: int) -> int:
+    """Next power of two ≥ x (bucket dims quantize to powers of two so a
+    heterogeneous catalog lands in a handful of shape classes)."""
+    return 1 << max(int(x) - 1, 0).bit_length()
+
+
+def pad_class(b: BuiltScenario) -> tuple:
+    """The padded shape class ``(params, C, O, R, E, W)`` of a scenario.
+
+    Clients / OSTs round up to the next power of two; workload rows and
+    stripe entries round up to ``p2(x + 1)`` so every padded table owns
+    at least one phantom row — phantom stripe entries must reference an
+    inactive row to contribute exact zeros.  ``params`` rides the key
+    because physics constants are baked into the compiled program and
+    cannot be padded away.
+    """
+    return (b.params, _p2(b.topo.n_clients), _p2(b.topo.n_osts),
+            _p2(len(b.table) + 1), _p2(len(b.table.entry_row) + 1),
+            _p2(b.table.n_waves))
+
+
+def pad_scenario(b: BuiltScenario, cls: tuple) -> BuiltScenario:
+    """Pad one built scenario up to a bucket shape class.
+
+    Every addition is an exact arithmetic identity: phantom OSTs and
+    clients join the dense topology with validity masks off and
+    fresh-idle per-interface state (zero queues, zero demand, neutral
+    disturbance — every reduction they join adds a literal ``0.0``);
+    phantom workload rows are inert (:meth:`WorkloadTable.padded`).
+    Real interfaces keep their original interface *order* under the
+    remap ``new = (old // O) * O_pad + old % O_pad``, so ordered
+    reductions over real columns regroup nothing.
+    """
+    params, nc, no, nr, ne, nw = cls
+    if params != b.params:
+        raise ValueError("pad class params mismatch")
+    topo_old = b.topo
+    if (nc, no) == (topo_old.n_clients, topo_old.n_osts):
+        topo = topo_old
+        remap = None
+    else:
+        base = SimTopo.dense(nc, no)
+        ost_valid = np.zeros(no, dtype=bool)
+        ost_valid[:topo_old.n_osts] = topo_old.ost_valid_mask()
+        client_valid = np.zeros(nc, dtype=bool)
+        client_valid[:topo_old.n_clients] = topo_old.client_valid_mask()
+        topo = dataclasses.replace(base, ost_valid=ost_valid,
+                                   client_valid=client_valid)
+        old_osc = np.arange(topo_old.n_osc, dtype=np.int64)
+        remap = (old_osc // topo_old.n_osts) * no + old_osc % topo_old.n_osts
+
+    state = init_state(topo)
+    for f in _STATE_FIELDS:
+        old = getattr(b.state, f)
+        if f in ("now", "tick_index"):
+            setattr(state, f, old)
+        elif f in ("ost_valid", "client_valid"):
+            pass    # init_state already took them from the padded topo
+        elif remap is None:
+            setattr(state, f, np.array(np.asarray(old)))
+        else:
+            new = getattr(state, f)
+            new[..., remap] = np.asarray(old)
+
+    table = b.table.padded(nr, ne, nw, topo.n_osc, osc_remap=remap)
+    pr = nr - len(b.table)
+    wstate = WorkloadState(
+        issued=np.concatenate([np.asarray(b.wstate.issued, dtype=float),
+                               np.zeros(pr)]),
+        done_base=np.concatenate([np.asarray(b.wstate.done_base,
+                                             dtype=float), np.zeros(pr)]))
+    return BuiltScenario(spec=b.spec, params=b.params, topo=topo,
+                         table=table, state=state, wstate=wstate)
+
+
+def stack_scenarios(built: list[BuiltScenario],
+                    ragged: bool = True) -> ScenarioBatch:
+    """Stack built scenarios into one batch.
+
+    Structurally-identical elements stack directly (bit-for-bit the
+    historical layout, zero padding).  Mismatched structures are padded
+    up to the elementwise-max :func:`pad_class` and stacked ragged —
+    unless ``ragged=False``, which restores the strict refusal (the
+    error names the first mismatching structure field and both values).
+    ``SimParams`` must always match: physics is baked into the compiled
+    program and cannot be masked off.
+    """
     if not built:
         raise ValueError("empty scenario batch")
     b0 = built[0]
@@ -115,20 +270,61 @@ def stack_scenarios(built: list[BuiltScenario]) -> ScenarioBatch:
         if b.params != b0.params:
             raise ValueError("batch elements must share SimParams "
                              "(the engine closes over element 0's)")
-        if (b.topo.n_clients, b.topo.n_osts) != (b0.topo.n_clients,
-                                                 b0.topo.n_osts):
-            raise ValueError("batch elements must share topology dims")
-        if structure_key(b) != structure_key(b0):
-            raise ValueError("batch elements must share workload-table "
-                             "structure (rows, waves, stripe entries)")
+    mm = _structure_mismatch(built)
+    if mm is not None and not ragged:
+        i, field, v, v0 = mm
+        raise ValueError(
+            f"batch elements must share workload-table structure to "
+            f"stack with ragged=False: element {i} has {field}={v} but "
+            f"element 0 has {field}={v0} (drop ragged=False to pad-and-"
+            f"mask mismatched structures into one bucket)")
+    osc_cols: tuple = ()
+    if mm is not None:
+        classes = [pad_class(b) for b in built]
+        cls = (b0.params,) + tuple(
+            max(c[j] for c in classes) for j in range(1, 6))
+        built = [pad_scenario(b, cls) for b in built]
+        osc_cols = tuple(np.nonzero(b.topo.osc_valid())[0].astype(np.int64)
+                         for b in built)
+        b0 = built[0]
+    # per-element validity masks live on the stacked state; the shared
+    # static topology is the all-valid bucket shape
+    topo = (b0.topo if mm is None
+            else dataclasses.replace(b0.topo, ost_valid=None,
+                                     client_valid=None))
     return ScenarioBatch(
         params=b0.params,
-        topo=b0.topo,
+        topo=topo,
         table=_tree_stack([b.table for b in built]),
         state=_tree_stack([b.state for b in built]),
         wstate=_tree_stack([b.wstate for b in built]),
         specs=tuple(b.spec for b in built),
+        osc_cols=osc_cols,
     )
+
+
+def bucket_scenarios(built: list[BuiltScenario], ragged: bool = True):
+    """Group a heterogeneous catalog into stackable buckets.
+
+    Returns ``[(indices, batch), ...]`` where ``indices`` maps each
+    batch element back to its position in ``built``.  With ``ragged``
+    (default) scenarios group by :func:`pad_class` — the whole registry
+    collapses to a handful of padded buckets, each one fused dispatch.
+    With ``ragged=False`` they group by exact :func:`structure_key`
+    (the historical per-structure bucketing, more buckets, no padding).
+    Bucket order is deterministic: sorted by shape class, ties by first
+    element index.
+    """
+    groups: dict = {}
+    for i, b in enumerate(built):
+        key = pad_class(b) if ragged else structure_key(b)
+        groups.setdefault(key, []).append(i)
+    out = []
+    for key in sorted(groups, key=lambda k: tuple(k[1:])):
+        idxs = groups[key]
+        out.append((idxs, stack_scenarios([built[i] for i in idxs],
+                                          ragged=ragged)))
+    return out
 
 
 # ---------------------------------------------------------------------- #
@@ -194,9 +390,11 @@ class BatchPort:
 
     def __init__(self, batch: ScenarioBatch, cols=None):
         self.batch = batch
-        n = batch.n_osc
         if cols is None:
-            cols = np.arange(len(batch) * n, dtype=np.int64)
+            # every *real* interface — identical to the historical
+            # all-columns default on unpadded batches, and keeps phantom
+            # padded interfaces out of probes and knob write-back
+            cols = batch.real_tune_cols()
         self._cols = np.asarray(cols, dtype=np.int64)
 
     def osc_ids(self) -> np.ndarray:
@@ -348,8 +546,24 @@ def run_batch(batch: ScenarioBatch, model=None, seconds: float = 10.0,
 # compiled fused loops, reused across run_batch calls: scenarios that
 # share (model, physics, topology dims, cadence) hit the same FusedLoop
 # instance, and jax.jit then caches per (table/state) *structure*, so an
-# evaluate sweep compiles a handful of programs instead of one per call
+# evaluate sweep compiles a handful of programs instead of one per call.
+# Ragged bucketing strengthens this: every scenario in a bucket shares
+# the padded topology, so the key is effectively (bucket shape, mesh).
 _FUSED_LOOPS: dict = {}
+
+# hit/miss counters for the compiled-loop cache, exposed through bench
+# provenance (benchmarks/ragged_scaling.py) so padding waste and
+# recompiles are observable rather than inferred
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def loop_cache_stats() -> dict:
+    """Compiled-loop cache counters: ``hits`` / ``misses`` / ``size``."""
+    return {**_CACHE_STATS, "size": len(_FUSED_LOOPS)}
+
+
+def reset_loop_cache_stats() -> None:
+    _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0
 
 
 def _cached_loop(params, topo, steps, model, tuner_params, seg_backend,
@@ -368,6 +582,7 @@ def _cached_loop(params, topo, steps, model, tuner_params, seg_backend,
            trace)   # TraceConfig is frozen/hashable; traced programs
     #                 have different outputs and must not alias untraced
     if key not in _FUSED_LOOPS:
+        _CACHE_STATS["misses"] += 1
         if len(_FUSED_LOOPS) >= 32:          # bound the cache: evict the
             _FUSED_LOOPS.pop(next(iter(_FUSED_LOOPS)))   # oldest (FIFO)
         # the model is kept alive alongside its loop: the key uses
@@ -378,6 +593,9 @@ def _cached_loop(params, topo, steps, model, tuner_params, seg_backend,
             params, topo, steps, model, tuner_params=tuner_params,
             seg_backend=seg_backend, batched=True, tuned=tuned,
             mesh=mesh, trace=trace), model)
+    else:
+        _CACHE_STATS["hits"] += 1
+        _FUSED_LOOPS[key][0].timers.add("loop_cache_hit", 0.0)
     return _FUSED_LOOPS[key][0]
 
 
@@ -396,7 +614,7 @@ def _run_batch_fused(batch: ScenarioBatch, model, steps: int,
 
     b, n = len(batch), batch.n_osc
     mask = np.zeros((b, n), dtype=bool)
-    cols = (np.arange(b * n, dtype=np.int64) if tune_cols is None
+    cols = (batch.real_tune_cols() if tune_cols is None
             else np.asarray(tune_cols, dtype=np.int64))
     mask[cols // n, cols % n] = True
     # the whole run's schedule, compiled once (pure function of the

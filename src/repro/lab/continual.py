@@ -323,17 +323,18 @@ CAUSE_WEIGHTS = {
 }
 
 
-def _race_vs_best(spec: ScenarioSpec, model: DIALModel, best_theta,
-                  seconds: float, interval: float,
-                  seg_backend: str) -> dict:
-    """DIAL vs the loser's recorded best-static θ, under the sweep's
-    own run length — the before/after measurement both ends share."""
-    from repro.obs.diagnose import DiagnoseConfig, race_scenario
+def _race_cases(cases: list[dict], model: DIALModel, seconds: float,
+                interval: float, seg_backend: str) -> list[dict]:
+    """DIAL vs each loser's recorded best-static θ, under the sweep's
+    own run length — the before/after measurement both ends share.
+    The mixed loser set races ragged: one fused dispatch per padded
+    shape bucket, results bit-identical to one race per case."""
+    from repro.obs.diagnose import DiagnoseConfig, race_many
 
     cfg = DiagnoseConfig(seconds=seconds, interval=interval,
-                         thetas=(tuple(int(x) for x in best_theta),),
                          seg_backend=seg_backend)
-    return race_scenario(spec, model, cfg)
+    return race_many([(c["spec"], c["row"]["best_static_theta"])
+                      for c in cases], model, cfg)
 
 
 def run_hard_case_curriculum(report_path: str, model: DIALModel, *,
@@ -391,12 +392,10 @@ def run_hard_case_curriculum(report_path: str, model: DIALModel, *,
         cases.append({"spec": spec, "row": r, "cause": cause,
                       "weight": CAUSE_WEIGHTS.get(cause, 1)})
 
-    # (1) before: every case, with the incoming forests
-    for c in cases:
-        c["before"] = _race_vs_best(c["spec"], model,
-                                    c["row"]["best_static_theta"],
-                                    race_seconds, race_interval,
-                                    seg_backend)
+    # (1) before: every case, with the incoming forests (ragged)
+    for c, race in zip(cases, _race_cases(cases, model, race_seconds,
+                                          race_interval, seg_backend)):
+        c["before"] = race
 
     # (2) the curriculum: weighted replays with in-place online refits
     n_replays = n_refits = 0
@@ -411,11 +410,9 @@ def run_hard_case_curriculum(report_path: str, model: DIALModel, *,
             n_refits += len(res.refits)
 
     # (3) after: the same races, with the curriculum-refit forests
-    for c in cases:
-        c["after"] = _race_vs_best(c["spec"], model,
-                                   c["row"]["best_static_theta"],
-                                   race_seconds, race_interval,
-                                   seg_backend)
+    for c, race in zip(cases, _race_cases(cases, model, race_seconds,
+                                          race_interval, seg_backend)):
+        c["after"] = race
 
     buckets: dict = {}
     for c in cases:

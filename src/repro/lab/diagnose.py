@@ -18,7 +18,7 @@ from __future__ import annotations
 import json
 
 from repro.lab.scenarios import get_scenario
-from repro.obs.diagnose import (DiagnoseConfig, diagnose,
+from repro.obs.diagnose import (DiagnoseConfig, diagnose_many,
                                 render_diagnosis_markdown,
                                 write_diagnosis_report)
 
@@ -77,9 +77,12 @@ def main(args) -> int:
 
     from repro.lab.__main__ import _make_mesh
     mesh = _make_mesh(args.mesh)
-    diags = [diagnose(spec, model, cfg, race=race, mesh=mesh,
-                      alt_model=alt_model, alt_model_name=args.alt_model)
-             for spec, race in pairs]
+    # a mixed loser set (--all) replays ragged: one traced dispatch per
+    # padded shape bucket instead of one per loser
+    diags = diagnose_many(pairs, model, cfg, mesh=mesh,
+                          alt_model=alt_model,
+                          alt_model_name=args.alt_model,
+                          ragged=not getattr(args, "no_ragged", False))
     jpath, mpath = write_diagnosis_report(diags, args.out)
     report = {"schema": diags[0]["schema"] if diags else "",
               "n_diagnoses": len(diags),

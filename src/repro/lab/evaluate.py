@@ -25,7 +25,8 @@ import numpy as np
 from repro.core.config_space import DEFAULT, SPACE
 from repro.core.model import DIALModel
 from repro.core.tuner import TunerParams
-from repro.lab.batch import BatchEngine, run_batch, stack_scenarios
+from repro.lab.batch import (BatchEngine, bucket_scenarios, run_batch,
+                             stack_scenarios)
 from repro.lab.scenarios import SCENARIOS, ScenarioSpec, build, get_scenario
 
 
@@ -96,6 +97,20 @@ def evaluate_scenario(spec: ScenarioSpec, model: DIALModel,
         run_trace = RunTrace.from_fused(fleet, trace, batch.params.tick)
 
     tput = batch.throughput(seconds)["total_mbs"]
+    changes = sum(int(r.decisions.changed.sum()) for r in fleet.decisions)
+    result = _make_result(spec, tput, changes, configs)
+    result.trace = run_trace        # plain attribute; row() stays JSON
+    return result
+
+
+def _make_result(spec: ScenarioSpec, tput, changes: int,
+                 configs) -> ScenarioResult:
+    """Assemble one scenario's result from its |Θ|+1 arm throughputs.
+
+    Shared by the per-scenario and the ragged whole-catalog paths so
+    both produce identical rows from identical figures.
+    """
+    m = len(configs)
     static = tput[:m]
     best = int(np.argmax(static))
     default_mbs = float(static[SPACE.index_of(DEFAULT)])
@@ -103,8 +118,7 @@ def evaluate_scenario(spec: ScenarioSpec, model: DIALModel,
     initial_mbs = (float(static[SPACE.index_of(theta0)])
                    if theta0 in configs else default_mbs)
     dial_mbs = float(tput[m])
-    changes = sum(int(r.decisions.changed.sum()) for r in fleet.decisions)
-    result = ScenarioResult(
+    return ScenarioResult(
         scenario=spec.name,
         tags=spec.tags,
         n_clients=spec.n_clients,
@@ -119,29 +133,95 @@ def evaluate_scenario(spec: ScenarioSpec, model: DIALModel,
         dial_frac_of_best_static=dial_mbs / max(float(static[best]), 1e-9),
         changes=changes,
     )
-    result.trace = run_trace        # plain attribute; row() stays JSON
-    return result
+
+
+def _evaluate_catalog_ragged(specs, model: DIALModel, seconds: float,
+                             interval: float, seg_backend: str, mesh,
+                             tuner_params: TunerParams | None = None):
+    """The whole heterogeneous catalog in one ``run_batch`` per bucket.
+
+    Every spec contributes its |Θ|+1 policy arms to a flat pool; the
+    pool is grouped by padded shape class (:func:`bucket_scenarios`) —
+    vpic next to dlio next to hetero_links — and each bucket runs
+    ragged in a single fused ``run_batch``.  Per-arm figures are
+    bit-equal to the per-scenario path (padding neutrality + ordered
+    real-column gathers), so the assembled rows are identical; the
+    catalog just stops paying one dispatch per scenario.
+
+    Returns ``(results_in_spec_order, n_buckets, n_dispatches)``.
+    """
+    configs = SPACE.configs()
+    m = len(configs)
+    built, owners = [], []
+    for si, spec in enumerate(specs):
+        for ai, theta in enumerate(configs + [spec.initial_theta]):
+            built.append(build(dataclasses.replace(
+                spec, initial_theta=tuple(theta))))
+            owners.append((si, ai))
+    buckets = bucket_scenarios(built)
+    tputs = {}
+    changes = dict.fromkeys(range(len(specs)), 0)
+    n_dispatches = 0
+    for idxs, batch in buckets:
+        n = batch.n_osc
+        dial_elems = [e for e, gi in enumerate(idxs) if owners[gi][1] == m]
+        tune_cols = np.concatenate(
+            [e * n + batch.element_cols(e) for e in dial_elems])
+        res = run_batch(batch, model=model, seconds=seconds,
+                        interval=interval, seg_backend=seg_backend,
+                        tuner_params=tuner_params, tune_cols=tune_cols,
+                        fused=True, mesh=mesh)
+        n_dispatches += 1
+        tp = batch.throughput(seconds)["total_mbs"]
+        for e, gi in enumerate(idxs):
+            tputs[owners[gi]] = float(tp[e])
+        for r in res.decisions:
+            elems = np.asarray(r.oscs) // n
+            ch = np.asarray(r.decisions.changed)
+            for e in np.unique(elems):
+                si = owners[idxs[int(e)]][0]
+                changes[si] += int(ch[elems == e].sum())
+    results = []
+    for si, spec in enumerate(specs):
+        tput = np.array([tputs[(si, ai)] for ai in range(m + 1)])
+        results.append(_make_result(spec, tput, changes[si], configs))
+    return results, len(buckets), n_dispatches
 
 
 def evaluate(names=None, model: DIALModel | None = None,
              seconds: float = 10.0, interval: float = 0.5,
              seg_backend: str = "jax", fused: bool = True,
-             mesh=None) -> dict:
+             mesh=None, ragged: bool = True) -> dict:
     """Run the catalog (default: every registered scenario) and return
-    the report dict (rows + summary)."""
+    the report dict (rows + summary).
+
+    ``ragged=True`` (default, fused only) pools every scenario's policy
+    arms and runs the mixed catalog in one fused ``run_batch`` per
+    padded shape bucket; the summary gains ``n_buckets`` /
+    ``n_dispatches``.  ``ragged=False`` runs one batch per scenario
+    (the historical path) — rows are identical either way.
+    """
     if model is None:
         model = default_model()
     names = list(names) if names else list(SCENARIOS)
-    rows = []
-    for name in names:
-        res = evaluate_scenario(get_scenario(name), model,
-                                seconds=seconds, interval=interval,
-                                seg_backend=seg_backend, fused=fused,
-                                mesh=mesh)
-        rows.append(res.row())
+    stats = None
+    if ragged and fused and len(names) > 1:
+        specs = [get_scenario(n) for n in names]
+        results, n_buckets, n_dispatches = _evaluate_catalog_ragged(
+            specs, model, seconds, interval, seg_backend, mesh)
+        rows = [r.row() for r in results]
+        stats = {"n_buckets": n_buckets, "n_dispatches": n_dispatches}
+    else:
+        rows = []
+        for name in names:
+            res = evaluate_scenario(get_scenario(name), model,
+                                    seconds=seconds, interval=interval,
+                                    seg_backend=seg_backend, fused=fused,
+                                    mesh=mesh)
+            rows.append(res.row())
     speedups = [r["dial_vs_default"] for r in rows]
     fracs = [r["dial_frac_of_best_static"] for r in rows]
-    return {
+    report = {
         "seconds": seconds,
         "interval": interval,
         "scenarios": rows,
@@ -153,6 +233,9 @@ def evaluate(names=None, model: DIALModel | None = None,
             "min_dial_frac_of_best_static": float(np.min(fracs)),
         },
     }
+    if stats is not None:
+        report["summary"].update(stats)
+    return report
 
 
 def render_markdown(report: dict) -> str:

@@ -11,12 +11,15 @@ one seed**, then sweeps them at scale:
 1. :func:`generate_spec` draws one :class:`~repro.lab.scenarios.ScenarioSpec`
    per ``(seed, index)`` pair via an independent ``SeedSequence`` stream,
    so any scenario of a sweep can be regenerated in isolation;
-2. :func:`run_sweep` groups the generated specs by
-   :func:`~repro.lab.batch.structure_key` — every bucket satisfies
-   ``stack_scenarios``' identical-structure constraint by construction —
-   and runs each bucket through ``run_batch(fused=True)`` with the
-   static-θ arms plus a DIAL-tuned arm per scenario (the best static arm
-   is the per-scenario oracle DIAL is judged against);
+2. :func:`run_sweep` groups the generated specs by padded shape class
+   (:func:`~repro.lab.batch.pad_class`) — mixed structures share a
+   bucket and ride the ragged pad-and-mask path, collapsing the old
+   one-dispatch-per-structure sweep into fewer padded dispatches — and
+   runs each bucket through ``run_batch(fused=True)`` with the static-θ
+   arms plus a DIAL-tuned arm per scenario (the best static arm is the
+   per-scenario oracle DIAL is judged against); padding is an exact
+   arithmetic identity, so rows match the per-structure sweep bit for
+   bit (``ragged=False`` restores the per-structure grouping);
 3. auto-triage: every scenario where DIAL loses to best-static by more
    than ``loss_threshold`` lands in the report's ``triage`` section,
    deduplicated by spec fingerprint, with the full spec serialized so
@@ -39,7 +42,8 @@ import os
 import numpy as np
 
 from repro.core.config_space import SPACE
-from repro.lab.batch import run_batch, stack_scenarios, structure_key
+from repro.lab.batch import (pad_class, run_batch, stack_scenarios,
+                             structure_key)
 from repro.lab.scenarios import DisturbanceEvent, ScenarioSpec, build
 from repro.pfs.engine import READ, WRITE
 from repro.pfs.workloads import (Workload, bdcats_read, dlio_reader,
@@ -276,13 +280,15 @@ def fingerprint(spec: ScenarioSpec) -> str:
 # the sweep
 # ---------------------------------------------------------------------- #
 def _run_bucket(specs_ix, thetas, model, cfg: FuzzConfig,
-                mesh=None) -> list[dict]:
-    """Race every scenario of one structural bucket: static arms + DIAL.
+                mesh=None, stats: dict | None = None) -> list[dict]:
+    """Race every scenario of one shape bucket: static arms + DIAL.
 
     ``specs_ix`` is ``[(index, spec), ...]``; buckets beyond
-    ``max_batch_elems`` elements run as several equally-structured
-    chunks (chunking never changes a scenario's result — elements are
-    independent under vmap).
+    ``max_batch_elems`` elements run as several equally-shaped chunks
+    (chunking never changes a scenario's result — elements are
+    independent under vmap).  Mixed structures inside a bucket stack
+    ragged (pad-and-mask); ``stats``, when given, accumulates
+    ``dispatches`` / ``real`` / ``padded`` interface counts.
     """
     m = len(thetas)
     arms = m + 1
@@ -299,12 +305,20 @@ def _run_bucket(specs_ix, thetas, model, cfg: FuzzConfig,
         batch = stack_scenarios(built)
         n = batch.n_osc
         dial_cols = np.concatenate(
-            [(j * arms + m) * n + np.arange(n) for j in range(len(chunk))])
+            [(j * arms + m) * n + batch.element_cols(j * arms + m)
+             for j in range(len(chunk))])
         result = run_batch(batch, model=model, seconds=cfg.seconds,
                            interval=cfg.interval,
                            seg_backend=cfg.seg_backend,
                            tune_cols=dial_cols, fused=True, mesh=mesh)
         tput = batch.throughput(cfg.seconds)["total_mbs"]
+        if stats is not None:
+            ps = batch.pad_stats()
+            stats["dispatches"] = stats.get("dispatches", 0) + 1
+            stats["real"] = (stats.get("real", 0)
+                             + ps["real_interfaces"])
+            stats["phantom"] = (stats.get("phantom", 0)
+                                + ps["phantom_interfaces"])
         changes = np.zeros(len(chunk), dtype=int)
         for r in result.decisions:
             if len(r):
@@ -333,7 +347,7 @@ def _run_bucket(specs_ix, thetas, model, cfg: FuzzConfig,
 
 
 def run_sweep(cfg: FuzzConfig, model, mesh=None, diagnose: bool = False,
-              max_diagnoses: int | None = 32) -> dict:
+              max_diagnoses: int | None = 32, ragged: bool = True) -> dict:
     """Generate, bucket, race, triage.  Deterministic from ``cfg.seed``
     and the model; the returned report dict serializes byte-identically
     across invocations.
@@ -351,22 +365,37 @@ def run_sweep(cfg: FuzzConfig, model, mesh=None, diagnose: bool = False,
     dominant cause + evidence rows, reusing the sweep's recorded race
     figures — worst losers first, at most ``max_diagnoses`` of them
     (``None`` = all; the summary records diagnosed-of-total and the
-    per-cause loss counts)."""
+    per-cause loss counts).
+
+    ``ragged=True`` (default) buckets specs by padded shape class so
+    mixed structures share fused dispatches; ``ragged=False`` restores
+    the historical one-bucket-per-structure grouping.  Rows are
+    bit-identical either way (padding neutrality)."""
     specs = generate_specs(cfg)
     thetas = [tuple(int(x) for x in t)
               for t in (cfg.thetas or SPACE.configs())]
 
+    key_fn = pad_class if ragged else structure_key
     buckets: dict = {}
     for i, spec in enumerate(specs):
-        key = structure_key(build(spec))
+        key = key_fn(build(spec))
         buckets.setdefault(key, []).append((i, spec))
 
-    rows = []
+    rows, occupancy = [], []
     # params (key[0]) is shared; order buckets by the numeric signature
     for key in sorted(buckets, key=lambda k: tuple(k[1:])):
+        stats: dict = {}
         rows.extend(_run_bucket(buckets[key], thetas, model, cfg,
-                                mesh=mesh))
+                                mesh=mesh, stats=stats))
+        denom = max(stats.get("real", 0) + stats.get("phantom", 0), 1)
+        occupancy.append({
+            "shape": "x".join(str(int(x)) for x in key[1:]),
+            "n_specs": len(buckets[key]),
+            "dispatches": stats.get("dispatches", 0),
+            "pad_waste": stats.get("phantom", 0) / denom,
+        })
     rows.sort(key=lambda r: r["index"])
+    n_dispatches = sum(b["dispatches"] for b in occupancy)
 
     losses, seen = [], set()
     for r in rows:
@@ -413,6 +442,8 @@ def run_sweep(cfg: FuzzConfig, model, mesh=None, diagnose: bool = False,
         "summary": {
             "n_scenarios": len(rows),
             "n_buckets": len(buckets),
+            "n_dispatches": n_dispatches,
+            "bucket_occupancy": occupancy,
             "n_unique_specs": len({r["fingerprint"] for r in rows}),
             "n_losses": len(losses),
             "mean_dial_frac_of_best_static": float(np.mean(fracs)),
@@ -437,8 +468,9 @@ def render_markdown(report: dict) -> str:
         "# Fuzz sweep triage",
         "",
         f"{s['n_scenarios']} generated scenarios "
-        f"({s['n_unique_specs']} unique, {s['n_buckets']} structural "
-        f"buckets), seed {cfg['seed']}, {cfg['seconds']:.0f} s each, "
+        f"({s['n_unique_specs']} unique, {s['n_buckets']} shape "
+        f"buckets, {s.get('n_dispatches', '?')} fused dispatches), "
+        f"seed {cfg['seed']}, {cfg['seconds']:.0f} s each, "
         f"{len(cfg['thetas'])} static arms.",
         "",
         f"DIAL fraction of best-static: mean "
@@ -448,6 +480,16 @@ def render_markdown(report: dict) -> str:
         f"{100 * report['triage']['loss_threshold']:.0f}%.",
         "",
     ]
+    occ = s.get("bucket_occupancy")
+    if occ:
+        lines += [
+            "| bucket (padded shape) | specs | dispatches | pad waste |",
+            "|---|---|---|---|",
+        ]
+        lines += [f"| `{b['shape']}` | {b['n_specs']} | "
+                  f"{b['dispatches']} | {100 * b['pad_waste']:.1f}% |"
+                  for b in occ]
+        lines.append("")
     if report["triage"]["losses"]:
         diagnosed = any(r.get("diagnosis")
                         for r in report["triage"]["losses"])

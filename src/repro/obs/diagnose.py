@@ -134,6 +134,53 @@ def race_scenario(spec, model, cfg: DiagnoseConfig, mesh=None) -> dict:
     }
 
 
+def race_many(cases, model, cfg: DiagnoseConfig, mesh=None) -> list[dict]:
+    """Ragged phase A for many scenarios, each against its *own* static
+    oracle θ: one fused dispatch per padded shape bucket.
+
+    ``cases`` is ``[(spec, best_theta), ...]``; each case contributes a
+    pinned-static arm plus a DIAL arm.  Elements are independent under
+    vmap and padding is an exact identity, so the returned dicts are
+    bit-identical to per-case ``race_scenario`` with
+    ``thetas=(best_theta,)`` — the mixed set just shares dispatches.
+    """
+    from repro.lab.batch import pad_class, run_batch, stack_scenarios
+    from repro.lab.scenarios import build
+
+    groups: dict = {}
+    for i, (spec, _) in enumerate(cases):
+        groups.setdefault(pad_class(build(spec)), []).append(i)
+    out: list = [None] * len(cases)
+    for key in sorted(groups, key=lambda k: tuple(k[1:])):
+        idxs = groups[key]
+        built = []
+        for i in idxs:
+            spec, theta = cases[i]
+            built.append(build(dataclasses.replace(
+                spec, initial_theta=tuple(int(x) for x in theta))))
+            built.append(build(spec))                # the DIAL arm
+        batch = stack_scenarios(built)
+        n = batch.n_osc
+        tune_cols = np.concatenate(
+            [(2 * j + 1) * n + batch.element_cols(2 * j + 1)
+             for j in range(len(idxs))])
+        run_batch(batch, model=model, seconds=cfg.seconds,
+                  interval=cfg.interval, seg_backend=cfg.seg_backend,
+                  tune_cols=tune_cols, fused=True, mesh=mesh)
+        tput = batch.throughput(cfg.seconds)["total_mbs"]
+        for j, i in enumerate(idxs):
+            best_mbs = float(tput[2 * j])
+            dial_mbs = float(tput[2 * j + 1])
+            out[i] = {
+                "dial_mbs": dial_mbs,
+                "best_static_mbs": best_mbs,
+                "best_static_theta": [int(x) for x in cases[i][1]],
+                "dial_frac_of_best_static":
+                    dial_mbs / max(best_mbs, 1e-9),
+            }
+    return out
+
+
 # ---------------------------------------------------------------------- #
 # phase B: the counterfactual arms — one traced intervened dispatch
 # ---------------------------------------------------------------------- #
@@ -147,42 +194,76 @@ def replay_arms(spec, model, cfg: DiagnoseConfig, theta_star,
     element 3 freezes θ at the scenario's initial configuration.
     Returns ``(arms MB/s by name, factual decision arrays (N, n, ...))``.
     """
-    from repro.lab.batch import run_batch, stack_scenarios
+    return replay_arms_many([(spec, theta_star)], model, cfg,
+                            mesh=mesh)[0]
+
+
+def replay_arms_many(cases, model, cfg: DiagnoseConfig,
+                     mesh=None) -> list[tuple[dict, dict]]:
+    """Ragged phase B: every case's four intervention arms, grouped by
+    padded shape class into one traced dispatch per bucket.
+
+    ``cases`` is ``[(spec, theta_star), ...]``.  Per case the batch
+    carries factual / pin-θ* / gates-open / freeze-θ elements
+    contiguously; interventions and the factual decision slice address
+    only the case's real interface columns, so mixed-structure loser
+    sets replay bit-identically to one-case-at-a-time ``replay_arms``.
+    """
+    from repro.lab.batch import pad_class, run_batch, stack_scenarios
     from repro.lab.scenarios import build
     from repro.obs.schema import RunTrace, TraceConfig
     from repro.pfs.loop_jax import Intervention
 
-    star = tuple(int(x) for x in theta_star)
-    built = [build(spec),
-             build(dataclasses.replace(spec, initial_theta=star)),
-             build(spec), build(spec)]
-    batch = stack_scenarios(built)
-    n = batch.n_osc
+    groups: dict = {}
+    for i, (spec, _) in enumerate(cases):
+        groups.setdefault(pad_class(build(spec)), []).append(i)
+    out: list = [None] * len(cases)
+    for key in sorted(groups, key=lambda k: tuple(k[1:])):
+        idxs = groups[key]
+        built, stars = [], []
+        for i in idxs:
+            spec, theta_star = cases[i]
+            star = tuple(int(x) for x in theta_star)
+            stars.append(star)
+            built += [build(spec),
+                      build(dataclasses.replace(spec, initial_theta=star)),
+                      build(spec), build(spec)]
+        batch = stack_scenarios(built)
+        n = batch.n_osc
 
-    iv = Intervention.neutral(n, batch=4)
-    pin_mask = iv.pin_mask.copy();      pin_mask[1] = True
-    pin_theta = iv.pin_theta.copy();    pin_theta[1] = np.asarray(
-        star, dtype=np.int64)
-    force_gates = iv.force_gates.copy(); force_gates[2] = True
-    freeze = iv.freeze.copy();          freeze[3] = True
-    iv = Intervention(pin_mask=pin_mask, pin_theta=pin_theta,
-                      force_gates=force_gates, freeze=freeze)
+        iv = Intervention.neutral(n, batch=4 * len(idxs))
+        pin_mask = iv.pin_mask.copy()
+        pin_theta = iv.pin_theta.copy()
+        force_gates = iv.force_gates.copy()
+        freeze = iv.freeze.copy()
+        for j, star in enumerate(stars):
+            pin_mask[4 * j + 1] = True
+            pin_theta[4 * j + 1] = np.asarray(star, dtype=np.int64)
+            force_gates[4 * j + 2] = True
+            freeze[4 * j + 3] = True
+        iv = Intervention(pin_mask=pin_mask, pin_theta=pin_theta,
+                          force_gates=force_gates, freeze=freeze)
 
-    tcfg = TraceConfig(timeline=False)   # decision provenance suffices
-    result = run_batch(batch, model=model, seconds=cfg.seconds,
-                       interval=cfg.interval, seg_backend=cfg.seg_backend,
-                       fused=True, mesh=mesh, trace=tcfg, intervene=iv)
-    tput = batch.throughput(cfg.seconds)["total_mbs"]
-    trace = RunTrace.from_fused(result, tcfg, batch.params.tick)
-    # fleet columns are b * n + osc: element 0's slice is the factual run
-    factual = {k: (np.asarray(v)[:, :n] if np.asarray(v).ndim >= 2
-                   else np.asarray(v))
-               for k, v in trace.decisions.items()}
-    arms = {"factual": float(tput[0]),
-            "pin_best_static": float(tput[1]),
-            "gates_open": float(tput[2]),
-            "freeze_theta": float(tput[3])}
-    return arms, factual
+        tcfg = TraceConfig(timeline=False)  # decision provenance suffices
+        result = run_batch(batch, model=model, seconds=cfg.seconds,
+                           interval=cfg.interval,
+                           seg_backend=cfg.seg_backend,
+                           fused=True, mesh=mesh, trace=tcfg,
+                           intervene=iv)
+        tput = batch.throughput(cfg.seconds)["total_mbs"]
+        trace = RunTrace.from_fused(result, tcfg, batch.params.tick)
+        for j, i in enumerate(idxs):
+            # fleet columns are b * n + osc: the factual element's real
+            # interface columns, in original order
+            cols = 4 * j * n + batch.element_cols(4 * j)
+            factual = {k: (np.asarray(v)[:, cols]
+                           if np.asarray(v).ndim >= 2 else np.asarray(v))
+                       for k, v in trace.decisions.items()}
+            out[i] = ({"factual": float(tput[4 * j]),
+                       "pin_best_static": float(tput[4 * j + 1]),
+                       "gates_open": float(tput[4 * j + 2]),
+                       "freeze_theta": float(tput[4 * j + 3])}, factual)
+    return out
 
 
 # ---------------------------------------------------------------------- #
@@ -326,27 +407,91 @@ def diagnose(spec, model, cfg: DiagnoseConfig | None = None, *,
     scenario tuned by a different artifact.  Deterministic: the same
     (spec, model, cfg) produce a byte-identical diagnosis dict.
     """
-    from repro.lab.fuzz import fingerprint
-
     cfg = cfg if cfg is not None else DiagnoseConfig()
     if race is None:
         race = race_scenario(spec, model, cfg, mesh=mesh)
     theta_star = [int(x) for x in race["best_static_theta"]]
-    losing = (race["best_static_mbs"] >= cfg.min_best_static_mbs
-              and race["dial_mbs"] < (1.0 - cfg.loss_threshold)
-              * race["best_static_mbs"])
 
     arms, factual = replay_arms(spec, model, cfg, theta_star, mesh=mesh)
     if alt_model is not None:
-        from repro.lab.batch import run_batch, stack_scenarios
-        from repro.lab.scenarios import build
+        arms["model_swap"] = _swap_many([spec], alt_model, cfg,
+                                        mesh=mesh)[0]
+    return _finish_diagnosis(spec, race, arms, factual, cfg,
+                             alt_model_name=alt_model_name)
 
-        swap = stack_scenarios([build(spec)])
-        run_batch(swap, model=alt_model, seconds=cfg.seconds,
+
+def diagnose_many(pairs, model, cfg: DiagnoseConfig | None = None, *,
+                  mesh=None, alt_model=None,
+                  alt_model_name: str | None = None,
+                  ragged: bool = True) -> list[dict]:
+    """Diagnose a whole loser set — ``[(spec, race-or-None), ...]``.
+
+    ``ragged=True`` groups the missing phase-A races, the intervention
+    replays, and any model-swap arms by padded shape class and runs
+    each group in one fused dispatch — diagnosis dicts are
+    bit-identical to calling :func:`diagnose` per pair, which
+    ``ragged=False`` does literally.
+    """
+    cfg = cfg if cfg is not None else DiagnoseConfig()
+    pairs = list(pairs)
+    if not ragged:
+        return [diagnose(spec, model, cfg, race=race, mesh=mesh,
+                         alt_model=alt_model,
+                         alt_model_name=alt_model_name)
+                for spec, race in pairs]
+    races = [race for _, race in pairs]
+    for i, r in enumerate(races):
+        if r is None:   # rare: catalog entries without recorded races —
+            # the full-grid phase A defines θ*, so it can't ride
+            # race_many's per-case-θ batching
+            races[i] = race_scenario(pairs[i][0], model, cfg, mesh=mesh)
+    replays = replay_arms_many(
+        [(spec, races[i]["best_static_theta"])
+         for i, (spec, _) in enumerate(pairs)], model, cfg, mesh=mesh)
+    swaps = (None if alt_model is None
+             else _swap_many([spec for spec, _ in pairs], alt_model, cfg,
+                             mesh=mesh))
+    out = []
+    for i, (spec, _) in enumerate(pairs):
+        arms, factual = replays[i]
+        if swaps is not None:
+            arms["model_swap"] = swaps[i]
+        out.append(_finish_diagnosis(spec, races[i], arms, factual, cfg,
+                                     alt_model_name=alt_model_name))
+    return out
+
+
+def _swap_many(specs, alt_model, cfg: DiagnoseConfig,
+               mesh=None) -> list[float]:
+    """The optional ``model_swap`` arm for many specs: the same
+    scenarios tuned by a different artifact, one ragged dispatch per
+    padded shape bucket."""
+    from repro.lab.batch import bucket_scenarios, run_batch
+    from repro.lab.scenarios import build
+
+    built = [build(s) for s in specs]
+    out = [0.0] * len(specs)
+    for idxs, batch in bucket_scenarios(built):
+        run_batch(batch, model=alt_model, seconds=cfg.seconds,
                   interval=cfg.interval, seg_backend=cfg.seg_backend,
                   fused=True, mesh=mesh)
-        arms["model_swap"] = float(
-            swap.throughput(cfg.seconds)["total_mbs"][0])
+        tp = batch.throughput(cfg.seconds)["total_mbs"]
+        for e, i in enumerate(idxs):
+            out[i] = float(tp[e])
+    return out
+
+
+def _finish_diagnosis(spec, race: dict, arms: dict, factual: dict,
+                      cfg: DiagnoseConfig,
+                      alt_model_name: str | None = None) -> dict:
+    """Post-replay assembly: signals, attribution, evidence, report
+    dict — shared by the per-scenario and ragged many-scenario paths."""
+    from repro.lab.fuzz import fingerprint
+
+    theta_star = [int(x) for x in race["best_static_theta"]]
+    losing = (race["best_static_mbs"] >= cfg.min_best_static_mbs
+              and race["dial_mbs"] < (1.0 - cfg.loss_threshold)
+              * race["best_static_mbs"])
 
     n_intervals = int(factual["decided"].shape[0])
     signals = _signals(factual, theta_star)

@@ -110,4 +110,9 @@ def collect_provenance() -> dict:
         prov["device_count"] = 0
         prov["device_kind"] = "none"
         prov["default_backend"] = "none"
+    try:
+        from repro.lab.batch import loop_cache_stats
+        prov["loop_cache"] = loop_cache_stats()
+    except Exception:
+        prov["loop_cache"] = {"hits": 0, "misses": 0, "size": 0}
     return prov

@@ -268,6 +268,8 @@ def engine_step_jax(params: SimParams, topo: SimTopo, state: SimState,
         ctr_active_integral=stack(ctr_act_int),
         ctr_dirty_integral=ctr_dirty_int,
         ctr_grant_integral=ctr_grant_int,
+        ost_valid=state.ost_valid,
+        client_valid=state.client_valid,
     )
 
 

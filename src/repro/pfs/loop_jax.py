@@ -624,7 +624,8 @@ class FusedLoop:
         leading ``(n_intervals * steps, ...)`` time axis (batched: a
         ``(B, total_ticks, ...)`` stack) — compiled **once** by the
         caller, not rebuilt per interval.  ``tune_mask`` restricts which
-        interfaces may decide (default: all).  Numpy in, numpy out.
+        interfaces may decide (default: all interfaces the state's
+        ragged-batch validity masks mark real).  Numpy in, numpy out.
 
         ``intervene`` (tuned loops only) applies a per-interface
         :class:`Intervention` counterfactual — ``None`` leaves the
@@ -651,10 +652,15 @@ class FusedLoop:
             args, n_pad = pad_fleet(args, self.mesh.devices.size)
         if self.tuned:
             if tune_mask is None:
-                shape = ((np.asarray(state.window_pages).shape[:1]
-                          + (self.topo.n_osc,)) if self.batched
-                         else (self.topo.n_osc,))
-                tune_mask = np.ones(shape, dtype=bool)
+                # default: every *valid* interface decides.  The state's
+                # ragged-batch masks (all-true for unpadded runs, so this
+                # is the historical all-ones mask) keep phantom padded
+                # interfaces out of Algorithm 1, gating, and write-back
+                # — they get zero trace weight because they never decide.
+                cv = np.asarray(state.client_valid, dtype=bool)
+                ov = np.asarray(state.ost_valid, dtype=bool)
+                tune_mask = (cv[..., self.topo.osc_client]
+                             & ov[..., self.topo.osc_ost])
             tune_mask = np.asarray(tune_mask, dtype=bool)
             if n_pad:
                 tune_mask = np.concatenate(

@@ -70,12 +70,23 @@ class SimParams:
 
 @dataclasses.dataclass(frozen=True)
 class SimTopo:
-    """Static topology: one OSC per (client, OST) pair, like Lustre LOV."""
+    """Static topology: one OSC per (client, OST) pair, like Lustre LOV.
+
+    ``ost_valid`` / ``client_valid`` mark which slots are real when the
+    topology has been padded up to a ragged-batch bucket shape
+    (:mod:`repro.lab.batch`).  ``None`` means all-valid — the default for
+    every directly-built topology, so unpadded runs are untouched.
+    Phantom slots carry exact arithmetic identities everywhere (zero
+    demand, neutral disturbance), so the masks are bookkeeping for the
+    tuning/probing layers, not an engine input.
+    """
 
     n_clients: int
     n_osts: int
     osc_client: np.ndarray   # (n_osc,) owning client of each OSC
     osc_ost: np.ndarray      # (n_osc,) backing OST of each OSC
+    ost_valid: np.ndarray | None = None      # (n_osts,) bool; None = all
+    client_valid: np.ndarray | None = None   # (n_clients,) bool; None = all
 
     @property
     def n_osc(self) -> int:
@@ -96,6 +107,21 @@ class SimTopo:
     def client_oscs(self, client: int) -> np.ndarray:
         return np.arange(client * self.n_osts, (client + 1) * self.n_osts)
 
+    def ost_valid_mask(self) -> np.ndarray:
+        if self.ost_valid is None:
+            return np.ones(self.n_osts, dtype=bool)
+        return np.asarray(self.ost_valid, dtype=bool)
+
+    def client_valid_mask(self) -> np.ndarray:
+        if self.client_valid is None:
+            return np.ones(self.n_clients, dtype=bool)
+        return np.asarray(self.client_valid, dtype=bool)
+
+    def osc_valid(self) -> np.ndarray:
+        """(n_osc,) bool — an interface is real iff both endpoints are."""
+        return (self.client_valid_mask()[self.osc_client]
+                & self.ost_valid_mask()[self.osc_ost])
+
 
 # The SimState fields, in pytree flattening order.  Everything mutable in
 # a tick lives here; per-op arrays are (2, n), per-OSC arrays (n,).
@@ -110,6 +136,7 @@ _STATE_FIELDS = (
     "ctr_latency_sum", "ctr_rpcs_done", "ctr_req_count", "ctr_req_bytes",
     "ctr_cache_hit_bytes", "ctr_block_time", "ctr_pending_integral",
     "ctr_active_integral", "ctr_dirty_integral", "ctr_grant_integral",
+    "ost_valid", "client_valid",
 )
 
 
@@ -159,6 +186,9 @@ class SimState:
     ctr_active_integral: np.ndarray
     ctr_dirty_integral: np.ndarray
     ctr_grant_integral: np.ndarray
+    # --- ragged-batch validity masks (pass-through; engine never reads) ---
+    ost_valid: np.ndarray       # (n_osts,) bool; phantom padded OSTs False
+    client_valid: np.ndarray    # (n_clients,) bool; phantom clients False
 
     def copy(self) -> "SimState":
         """Deep copy (fresh numpy arrays) — engine_step mutates the copy."""
@@ -206,6 +236,8 @@ def init_state(topo: SimTopo) -> SimState:
         ctr_active_integral=zeros2(),
         ctr_dirty_integral=np.zeros(n),
         ctr_grant_integral=np.zeros(n),
+        ost_valid=topo.ost_valid_mask(),
+        client_valid=topo.client_valid_mask(),
     )
 
 

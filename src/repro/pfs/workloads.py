@@ -235,6 +235,10 @@ class WorkloadTable:
     # interface entry_osc[e]
     entry_row: np.ndarray    # int64
     entry_osc: np.ndarray    # int64
+    # (R,) bool — False rows are phantom padding added by :meth:`padded`
+    # (ragged-batch bucketing); they never go active and every per-entry
+    # contribution they make is an exact zero
+    row_valid: np.ndarray
     n_osc: int
     n_waves: int
     names: tuple = ()
@@ -275,9 +279,62 @@ class WorkloadTable:
             wave=wave,
             entry_row=np.array(entry_row, dtype=np.int64),
             entry_osc=np.array(entry_osc, dtype=np.int64),
+            row_valid=np.ones(r, dtype=bool),
             n_osc=topo.n_osc,
             n_waves=int(wave.max()) + 1 if r else 1,
             names=tuple(w.name for w in rows),
+        )
+
+    def padded(self, n_rows: int, n_entries: int, n_waves: int,
+               new_n_osc: int, osc_remap=None) -> "WorkloadTable":
+        """Pad to a ragged-batch bucket shape with inert phantom rows.
+
+        Phantom rows carry exact arithmetic identities: ``duty_cycle=0``
+        (never active), ``n_threads=0`` (zero issue cap), ``row_valid``
+        off.  Phantom stripe entries point at the first phantom row, so
+        their per-entry shares are exactly ``0.0`` and every segment-sum
+        they join is unchanged bitwise.  ``osc_remap`` (old ``n_osc`` ->
+        new interface id) rewires the stripe scatter when the topology
+        itself was padded; extra waves beyond ``self.n_waves`` run as
+        empty (exact-identity) wave iterations.
+        """
+        r, e = len(self), len(self.entry_row)
+        if n_rows < r or n_entries < e or n_waves < self.n_waves:
+            raise ValueError("padded shape must cover the existing table")
+        if n_entries > e and n_rows == r:
+            raise ValueError("phantom entries need at least one phantom row")
+        pr = n_rows - r
+
+        def pad_row(a, fill, dtype=None):
+            return np.concatenate(
+                [np.asarray(a), np.full(pr, fill, dtype=dtype or a.dtype)])
+
+        entry_osc = np.asarray(self.entry_osc)
+        if osc_remap is not None:
+            entry_osc = np.asarray(osc_remap, dtype=np.int64)[entry_osc]
+        pe = n_entries - e
+        return WorkloadTable(
+            client=pad_row(self.client, 0),
+            op=pad_row(self.op, READ),
+            req_size=pad_row(self.req_size, 1.0),
+            randomness=pad_row(self.randomness, 0.0),
+            n_threads=pad_row(self.n_threads, 0.0),
+            thread_rate=pad_row(self.thread_rate, 0.0),
+            duty_cycle=pad_row(self.duty_cycle, 0.0),
+            period=pad_row(self.period, 1.0),
+            stripe_len=pad_row(self.stripe_len, 1.0),
+            wave=pad_row(self.wave, 0),
+            entry_row=np.concatenate(
+                [np.asarray(self.entry_row),
+                 np.full(pe, r, dtype=np.int64)]),
+            entry_osc=np.concatenate(
+                [entry_osc, np.zeros(pe, dtype=np.int64)]),
+            row_valid=np.concatenate(
+                [np.asarray(self.row_valid, dtype=bool),
+                 np.zeros(pr, dtype=bool)]),
+            n_osc=int(new_n_osc),
+            n_waves=int(n_waves),
+            names=self.names,
         )
 
     # ------------------------------------------------------------------ #
@@ -338,9 +395,11 @@ class WorkloadTable:
         req_bytes_add = [zero_n, zero_n]
         issued = wstate.issued
 
-        active = xp.logical_or(
-            self.duty_cycle >= 1.0,
-            xp.mod(now, self.period) < self.duty_cycle * self.period)
+        active = xp.logical_and(
+            xp.logical_or(
+                self.duty_cycle >= 1.0,
+                xp.mod(now, self.period) < self.duty_cycle * self.period),
+            self.row_valid)
         cap_row = self.n_threads * self.thread_rate * dt
         # wave-invariant reader inputs: reads never observe intra-tick
         # counter changes, so the stripe-summed done_bytes uses the
@@ -423,6 +482,7 @@ class WorkloadTable:
 _TABLE_ARRAY_FIELDS = (
     "client", "op", "req_size", "randomness", "n_threads", "thread_rate",
     "duty_cycle", "period", "stripe_len", "wave", "entry_row", "entry_osc",
+    "row_valid",
 )
 
 try:  # pragma: no cover - exercised implicitly by the lab batch tests

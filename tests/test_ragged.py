@@ -1,0 +1,300 @@
+"""Ragged pad-and-mask batching: padding must be an exact arithmetic
+identity.
+
+Property tests for the bucketed ragged stacking layer
+(:mod:`repro.lab.batch`): phantom OSTs / clients / workload rows added
+by :func:`pad_scenario` may change *shapes* only — θ trajectories pin
+bit-equal and counters within 1e-6 against unpadded per-scenario runs
+on the numpy oracle, the fused jax loop, the traced + intervened replay
+path, and (tests below via subprocess) the 8-forced-device sharded
+path.  The generated-scenario cases come from the PR-6 fuzz generator,
+whose periodic duty-cycle disturbance schedules are exactly the
+knife-edge population where any non-identity padding would flip a
+decision.
+"""
+
+import copy
+import dataclasses
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.gbdt import GBDTClassifier, GBDTParams
+from repro.core.metrics import feature_dim
+from repro.core.model import DIALModel
+from repro.lab.batch import (bucket_scenarios, loop_cache_stats, pad_class,
+                             pad_scenario, reset_loop_cache_stats, run_batch,
+                             stack_scenarios, structure_key)
+from repro.lab.fuzz import SMOKE, generate_spec
+from repro.lab.scenarios import SCENARIOS, build, make_schedule
+from repro.pfs.state import _STATE_FIELDS, READ, WRITE, engine_step
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+rng = np.random.default_rng(0)
+
+
+def _forest(dim):
+    x = rng.normal(size=(400, dim)).astype(np.float32)
+    y = (x[:, 0] + x[:, -1] > -1.0).astype(np.int64)
+    return GBDTClassifier(GBDTParams(n_trees=8, max_depth=3)).fit(x, y).forest
+
+
+K = 1
+MODEL = DIALModel(read_forest=_forest(feature_dim(READ, K)),
+                  write_forest=_forest(feature_dim(WRITE, K)),
+                  backend="jax", k=K)
+
+#: fuzz-generated specs with periodic (duty-cycled) events — SMOKE draws
+#: at least one event per scenario, two topology classes
+_GEN = [generate_spec(SMOKE, i) for i in range(6)]
+
+
+def _mixed_specs():
+    """Three registry specs spanning three distinct structures."""
+    return [SCENARIOS["dlio_bert"], SCENARIOS["vpic_checkpoint"],
+            SCENARIOS["noisy_neighbor"]]
+
+
+# ---------------------------------------------------------------------- #
+# bucketing + strict mode
+# ---------------------------------------------------------------------- #
+def test_registry_buckets_partition_and_collapse():
+    built = [build(s) for s in SCENARIOS.values()]
+    ragged = bucket_scenarios(built)
+    strict = bucket_scenarios(built, ragged=False)
+    for buckets in (ragged, strict):
+        seen = sorted(i for idxs, _ in buckets for i in idxs)
+        assert seen == list(range(len(built)))
+    assert len(ragged) <= len(strict)
+    assert len(ragged) == len({pad_class(b) for b in built})
+    for idxs, batch in ragged:
+        assert len(batch) == len(idxs)
+
+
+def test_strict_refusal_names_field_and_values():
+    a, b = build(SCENARIOS["noisy_neighbor"]), build(SCENARIOS["dlio_bert"])
+    k_a, k_b = structure_key(a), structure_key(b)
+    assert k_a != k_b
+    with pytest.raises(ValueError) as ei:
+        stack_scenarios([a, b], ragged=False)
+    msg = str(ei.value)
+    # the first mismatching structure field, with both values
+    field = next(f for f, va, vb in zip(
+        ("params", "n_clients", "n_osts", "n_rows", "n_waves", "n_entries"),
+        k_a, k_b) if va != vb)
+    assert f"element 1 has {field}=" in msg
+    assert f"element 0 has {field}=" in msg
+    assert "ragged=False" in msg
+    # the same pair stacks fine ragged
+    batch = stack_scenarios([a, b])
+    assert len(batch) == 2 and batch.osc_cols
+
+
+def test_params_mismatch_always_refused():
+    a = build(SCENARIOS["noisy_neighbor"])
+    b = build(SCENARIOS["noisy_neighbor"])
+    b = dataclasses.replace(b, params=dataclasses.replace(
+        b.params, tick=b.params.tick * 2))
+    with pytest.raises(ValueError, match="SimParams"):
+        stack_scenarios([a, b])
+
+
+# ---------------------------------------------------------------------- #
+# padding neutrality: numpy oracle, bit-equal
+# ---------------------------------------------------------------------- #
+def _forced_class(b):
+    """A strictly larger shape class: padding fires on every axis."""
+    c = pad_class(b)
+    return (c[0],) + tuple(2 * x for x in c[1:])
+
+
+def _numpy_ticks(b, n_ticks):
+    st, ws = copy.deepcopy(b.state), copy.deepcopy(b.wstate)
+    sched = make_schedule(b.spec.events, b.topo, b.params, 0, n_ticks)
+    for t in range(n_ticks):
+        dist = jax.tree.map(lambda a: np.asarray(a)[t], sched)
+        demand, ws = b.table.demand_step(b.params, ws, st)
+        st = engine_step(b.params, b.topo, st, demand, disturbance=dist)
+    return st, ws
+
+
+@pytest.mark.parametrize("name", ["dlio_bert", "vpic_checkpoint",
+                                  "noisy_neighbor"])
+def test_padding_neutral_numpy_registry(name):
+    _assert_numpy_neutral(build(SCENARIOS[name]), n_ticks=200)
+
+
+@pytest.mark.parametrize("idx", [0, 1, 2, 3])
+def test_padding_neutral_numpy_generated_knife_edge(idx):
+    # generated specs carry periodic duty-cycled events (PR-6 knife edge)
+    _assert_numpy_neutral(build(_GEN[idx]), n_ticks=150)
+
+
+def _assert_numpy_neutral(b, n_ticks):
+    p = pad_scenario(build(b.spec) if b.spec else b, _forced_class(b))
+    o_old, o_new = b.topo.n_osts, p.topo.n_osts
+    osc = np.arange(b.topo.n_osc)
+    remap = (osc // o_old) * o_new + osc % o_old
+
+    st_u, ws_u = _numpy_ticks(b, n_ticks)
+    st_p, ws_p = _numpy_ticks(p, n_ticks)
+
+    for f in _STATE_FIELDS:
+        if f in ("ost_valid", "client_valid"):
+            continue
+        u, v = np.asarray(getattr(st_u, f)), np.asarray(getattr(st_p, f))
+        if u.ndim == 0:
+            assert u == v, f
+        else:
+            np.testing.assert_array_equal(
+                np.take(v, remap, axis=-1), u,
+                err_msg=f"{f} not bit-equal under padding")
+    r = len(b.table)
+    np.testing.assert_array_equal(np.asarray(ws_p.issued)[:r], ws_u.issued)
+    np.testing.assert_array_equal(np.asarray(ws_p.done_base)[:r],
+                                  ws_u.done_base)
+    # phantom rows never issued anything
+    assert not np.asarray(ws_p.issued)[r:].any()
+
+
+# ---------------------------------------------------------------------- #
+# padding neutrality: fused ragged batch vs per-scenario unpadded
+# ---------------------------------------------------------------------- #
+def _theta(batch, b):
+    cols = batch.element_cols(b)
+    return (np.asarray(batch.state.window_pages)[b, cols],
+            np.asarray(batch.state.rpcs_in_flight)[b, cols])
+
+
+def test_ragged_fused_matches_unpadded_per_scenario():
+    specs = _mixed_specs()
+    ragged = stack_scenarios([build(s) for s in specs])
+    assert ragged.osc_cols, "mixed structures must have taken the pad path"
+    run_batch(ragged, MODEL, seconds=3.0, interval=0.5, fused=True)
+    tput_r = ragged.throughput(3.0)["total_mbs"]
+
+    for b, spec in enumerate(specs):
+        solo = stack_scenarios([build(spec)])
+        run_batch(solo, MODEL, seconds=3.0, interval=0.5, fused=True)
+        wp_r, rif_r = _theta(ragged, b)
+        wp_s, rif_s = _theta(solo, 0)
+        np.testing.assert_array_equal(wp_r, wp_s, err_msg=spec.name)
+        np.testing.assert_array_equal(rif_r, rif_s, err_msg=spec.name)
+        for f in ("ctr_bytes_done", "ctr_rpcs_sent", "ctr_latency_sum",
+                  "ctr_block_time", "ctr_pending_integral"):
+            u = np.asarray(getattr(solo.state, f))[0]
+            v = np.take(np.asarray(getattr(ragged.state, f))[b],
+                        ragged.element_cols(b), axis=-1)
+            np.testing.assert_allclose(v, u, rtol=1e-6, atol=1e-9,
+                                       err_msg=f"{spec.name}:{f}")
+        np.testing.assert_allclose(
+            tput_r[b], float(solo.throughput(3.0)["total_mbs"][0]),
+            rtol=1e-6)
+
+
+def test_ragged_traced_intervened_matches_per_case():
+    """The diagnose replay (traced + intervention arms) is bit-identical
+    ragged vs one-case-at-a-time across mixed structures."""
+    from repro.obs.diagnose import DiagnoseConfig, replay_arms, \
+        replay_arms_many
+
+    cfg = DiagnoseConfig(seconds=2.0, interval=0.5)
+    cases = [(_GEN[0], (64, 2)), (_GEN[1], (256, 8))]
+    if pad_class(build(cases[0][0])) == pad_class(build(cases[1][0])):
+        cases = [(_GEN[0], (64, 2)), (_mixed_specs()[0], (256, 8))]
+    many = replay_arms_many(cases, MODEL, cfg)
+    for (spec, star), (arms_m, fact_m) in zip(cases, many):
+        arms_1, fact_1 = replay_arms(spec, MODEL, cfg, star)
+        assert arms_m == arms_1, spec.name
+        assert set(fact_m) == set(fact_1)
+        for k in fact_1:
+            np.testing.assert_array_equal(fact_m[k], fact_1[k],
+                                          err_msg=f"{spec.name}:{k}")
+
+
+# ---------------------------------------------------------------------- #
+# compiled-loop cache counters
+# ---------------------------------------------------------------------- #
+def test_loop_cache_stats_count_hits_and_misses():
+    reset_loop_cache_stats()
+    base = loop_cache_stats()
+    assert base["hits"] == 0 and base["misses"] == 0
+    batch = stack_scenarios([build(SCENARIOS["noisy_neighbor"])])
+    run_batch(batch, MODEL, seconds=1.0, interval=0.5, fused=True)
+    after_first = loop_cache_stats()
+    batch2 = stack_scenarios([build(SCENARIOS["noisy_neighbor"])])
+    run_batch(batch2, MODEL, seconds=1.0, interval=0.5, fused=True)
+    after_second = loop_cache_stats()
+    # first run either compiled (miss) or reused a loop compiled by an
+    # earlier test (hit) — the counters must see it either way
+    assert after_first["hits"] + after_first["misses"] >= 1
+    # the structurally-identical rerun must be a pure cache hit
+    assert after_second["hits"] >= after_first["hits"] + 1
+    assert after_second["misses"] == after_first["misses"]
+    assert after_second["size"] >= 1
+
+
+# ---------------------------------------------------------------------- #
+# sharded path: 8 forced host devices (subprocess)
+# ---------------------------------------------------------------------- #
+def _run_py(code, devices=8):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=600, cwd=REPO)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_ragged_sharded_matches_unpadded_8dev():
+    """A mixed ragged batch on an 8-device mesh pins θ bit-equal and
+    counters ≤1e-6 against per-scenario unpadded single-device runs."""
+    out = _run_py("""
+import numpy as np
+from repro.core.gbdt import GBDTClassifier, GBDTParams
+from repro.core.metrics import feature_dim
+from repro.core.model import DIALModel
+from repro.pfs.state import READ, WRITE
+from repro.distributed.sharding import fleet_mesh
+from repro.lab.batch import run_batch, stack_scenarios
+from repro.lab.scenarios import SCENARIOS, build
+
+rng = np.random.default_rng(0)
+def _forest(dim):
+    x = rng.normal(size=(400, dim)).astype(np.float32)
+    y = (x[:, 0] + x[:, -1] > -1.0).astype(np.int64)
+    return GBDTClassifier(GBDTParams(n_trees=8, max_depth=3)).fit(x, y).forest
+model = DIALModel(read_forest=_forest(feature_dim(READ, 1)),
+                  write_forest=_forest(feature_dim(WRITE, 1)),
+                  backend="jax", k=1)
+
+specs = [SCENARIOS[n] for n in
+         ("dlio_bert", "vpic_checkpoint", "noisy_neighbor")]
+ragged = stack_scenarios([build(s) for s in specs])
+assert ragged.osc_cols
+run_batch(ragged, model, seconds=2.0, interval=0.5, fused=True,
+          mesh=fleet_mesh(8))
+for b, spec in enumerate(specs):
+    solo = stack_scenarios([build(spec)])
+    run_batch(solo, model, seconds=2.0, interval=0.5, fused=True)
+    cols = ragged.element_cols(b)
+    for f, exact in (("window_pages", True), ("rpcs_in_flight", True),
+                     ("ctr_bytes_done", False), ("ctr_rpcs_sent", False)):
+        u = np.asarray(getattr(solo.state, f))[0]
+        v = np.take(np.asarray(getattr(ragged.state, f))[b], cols, axis=-1)
+        if exact:
+            np.testing.assert_array_equal(v, u, err_msg=f"{spec.name}:{f}")
+        else:
+            np.testing.assert_allclose(v, u, rtol=1e-6,
+                                       err_msg=f"{spec.name}:{f}")
+print("OK")
+""")
+    assert "OK" in out
